@@ -1,0 +1,44 @@
+"""Remote-capacity ablation (the TPU adaptation of the paper's RPC pulls).
+
+The KVStore's data-dependent remote pulls become a fixed-capacity all_to_all
+(DESIGN.md §2). This ablation quantifies the mechanism: triplet drop rate vs
+capacity R, for METIS vs random partitioning — METIS needs a far smaller R
+for the same drop rate, which is exactly how the paper's Fig. 7 communication
+saving manifests on a TPU."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, kg_fixture
+from repro.common.config import KGEConfig
+from repro.core.graph_part import cut_fraction, partition
+from repro.core.rel_part import relation_partition
+from repro.core.sampling import DistSampler
+
+
+def run():
+    kg = kg_fixture("medium")
+    P_ = 4
+    for method in ("metis", "random"):
+        book = partition(kg.train, kg.n_entities, P_, method=method)
+        rp = relation_partition(kg.rel_counts(), P_)
+        cut = cut_fraction(kg.train, book.part_of)
+        for R in (64, 256, 1024, 4096):
+            cfg = KGEConfig(model="transe_l2", n_entities=kg.n_entities,
+                            n_relations=kg.n_relations, dim=32,
+                            batch_size=512, neg_sample_size=64, n_parts=P_,
+                            remote_capacity=R, partitioner=method)
+            s = DistSampler(kg.train, book, rp, cfg, np.random.default_rng(0))
+            drops = used = 0
+            n = 4
+            for _ in range(n):
+                db = s.sample()
+                drops += db.dropped_triplets
+                used += db.remote_rows_used
+            rate = drops / (n * P_ * cfg.batch_size)
+            emit(f"capacity/{method}_R{R}", 0.0,
+                 f"resamples_per_triplet={rate:.3f} remote_rows/step={used/n:.0f} cut={cut:.2f}")
+    emit("capacity/NOTE", 0.0,
+         "METIS reaches ~0 drops at a fraction of random's R -> smaller "
+         "all_to_all buffers -> smaller collective roofline term")

@@ -1,0 +1,39 @@
+"""Kernel-path benchmark: the T1 GEMM reformulation's arithmetic-intensity
+gain, plus jnp-path step timings with/without the joint form.
+
+Pallas interpret-mode wall-clock on CPU is not meaningful (it is an
+emulator); the TPU-relevant quantity is the memory-traffic ratio, which is
+shape-derived, and the XLA-fused jnp GEMM path timing, which Fig. 3's
+op-efficiency claim maps onto."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_loop
+from repro.core.scores import pairwise_scores
+
+
+def run():
+    rng = np.random.default_rng(0)
+    b, k, d = 1024, 256, 400
+    o = jnp.asarray(rng.standard_normal((b, d)).astype(np.float32))
+    negs = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32))
+
+    gemm = jax.jit(lambda a, n: pairwise_scores("l2sq", a, n))
+    t_gemm = time_loop(lambda: gemm(o, negs), iters=20)
+
+    # the pre-T1 form: per-triplet negatives, no shared pool -> (b, k, d)
+    negs_full = jnp.asarray(rng.standard_normal((b, k, d)).astype(np.float32))
+    naive = jax.jit(lambda a, n: jnp.sum(jnp.square(a[:, None, :] - n), -1))
+    t_naive = time_loop(lambda: naive(o, negs_full), iters=20)
+
+    bytes_joint = (b * d + k * d + b * k) * 4
+    bytes_naive = (b * d + b * k * d + b * k) * 4
+    emit("kernel/joint_gemm_l2sq", t_gemm,
+         f"speedup={t_naive/t_gemm:.1f}x bytes_ratio={bytes_naive/bytes_joint:.0f}x "
+         f"flops/byte={2*b*k*d/bytes_joint:.1f}")
+    emit("kernel/naive_pairwise", t_naive,
+         f"flops/byte={2*b*k*d/bytes_naive:.2f} (memory-bound by construction)")

@@ -1,0 +1,59 @@
+"""Paper Fig. 7 + Table 7: METIS vs random partitioning for distributed
+training — cut fraction, remote pull volume, step time, and accuracy parity."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, kg_fixture, time_loop
+from repro.common.config import KGEConfig
+from repro.core.distributed import build_dist_train_step, init_dist_state, make_program
+from repro.core.graph_part import cut_fraction, partition
+from repro.core.rel_part import relation_partition
+from repro.core.sampling import DistSampler
+from repro.launch.mesh import make_mesh
+
+
+def run():
+    kg = kg_fixture("medium")
+    mesh = make_mesh((4, 2), ("data", "model"))
+    out = {}
+    for method in ("metis", "random"):
+        cfg = KGEConfig(model="transe_l2", n_entities=kg.n_entities,
+                        n_relations=kg.n_relations, dim=128, batch_size=512,
+                        neg_sample_size=128, lr=0.1, n_parts=4,
+                        remote_capacity=1024, partitioner=method)
+        book = partition(kg.train, cfg.n_entities, 4, method=method)
+        rp = relation_partition(kg.rel_counts(), 4)
+        prog = make_program(cfg, book.rows_per_part, rp.slots_per_part,
+                            rp.n_shared)
+        sampler = DistSampler(kg.train, book, rp, cfg, np.random.default_rng(0))
+        step, state_sh, batch_sh = build_dist_train_step(prog, mesh)
+        remote = 0
+        dropped = 0
+        with jax.set_mesh(mesh):
+            state = jax.device_put(init_dist_state(prog, jax.random.key(0)),
+                                   state_sh)
+            db = sampler.sample()
+            remote += db.remote_rows_used
+            dropped += db.dropped_triplets
+            batch = {k: jax.device_put(jnp.asarray(getattr(db, k)), batch_sh[k])
+                     for k in batch_sh}
+
+            def one():
+                nonlocal state
+                state, m = step(state, batch)
+                return m
+
+            t = time_loop(one, iters=6)
+        cut = cut_fraction(kg.train, book.part_of)
+        out[method] = (cut, remote, t)
+        emit(f"fig7/{method}", t,
+             f"cut={cut:.3f} remote_rows/batch={remote} dropped={dropped}")
+    cm, rm, tm = out["metis"]
+    cr, rr, tr = out["random"]
+    emit("fig7/summary", 0.0,
+         f"metis_cut/random_cut={cm/cr:.2f} remote_ratio={rm/max(rr,1):.2f} "
+         f"(paper: METIS ~20% faster via less communication)")

@@ -1,0 +1,37 @@
+"""Roofline summary: reads dryrun_results/*.json (produced by
+scripts/run_dryruns.sh) and prints the per-(arch x shape x mesh) table —
+the scalability analysis standing in for the paper's Figs. 5-8 at pod scale."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run():
+    files = sorted(glob.glob("dryrun_results/*.json"))
+    if not files:
+        emit("roofline/missing", 0.0,
+             "run scripts/run_dryruns.sh first (see EXPERIMENTS.md)")
+        return
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        name = os.path.basename(f)[:-5]
+        if "skipped" in r:
+            emit(f"roofline/{name}", 0.0, "SKIP:" + r["skipped"][:60])
+            continue
+        if "error" in r:
+            emit(f"roofline/{name}", 0.0, "ERROR:" + r["error"][:60])
+            continue
+        step_ms = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e3
+        emit(
+            f"roofline/{name}", step_ms * 1e3,
+            f"dominant={r['dominant']} cmp_ms={r['compute_s']*1e3:.2f} "
+            f"mem_ms={r['memory_s']*1e3:.2f} coll_ms={r['collective_s']*1e3:.2f} "
+            f"useful={r['useful_ratio']:.2f} "
+            f"GiB/dev={(r.get('bytes_per_device') or 0)/2**30:.2f}",
+        )

@@ -1,0 +1,52 @@
+"""Shared benchmark helpers: timing, CSV rows, small fixtures."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_loop(fn: Callable[[], object], iters: int, warmup: int = 3) -> float:
+    """Median wall-clock microseconds per call (after warmup)."""
+    for _ in range(warmup):
+        r = fn()
+    _block(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn()
+        _block(r)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def _block(r):
+    import jax
+
+    for leaf in jax.tree.leaves(r):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def kg_fixture(scale: str = "small", seed: int = 0):
+    from repro.data.kg_synth import make_synthetic_kg
+
+    if scale == "small":
+        return make_synthetic_kg(2000, 40, 40_000, n_clusters=8, seed=seed)
+    if scale == "medium":
+        return make_synthetic_kg(8000, 200, 160_000, n_clusters=16, seed=seed)
+    if scale == "fb15k":
+        from repro.data.kg_synth import fb15k_like
+
+        return fb15k_like(scale=1.0, seed=seed)
+    raise ValueError(scale)

@@ -1,0 +1,67 @@
+import os
+
+# Benchmarks that exercise the distributed path need a small CPU mesh
+# (8 devices — deliberately NOT the 512-device dry-run setting).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--full]
+
+Prints ``name,us_per_call,derived`` CSV per the repo convention.
+Set BENCH_FAST=0 (or --full) for paper-scale accuracy runs.
+
+Mapping (see DESIGN.md §6):
+    fig3    bench_negative_sampling   joint vs naive sampling (T1)
+    table4  bench_degree_negatives    degree-based negatives (T2)
+    fig4    bench_overlap             overlap update + relation partitioning
+    fig5    bench_scaling             many-unit scaling
+    fig7    bench_partitioning        METIS vs random (T3) + Table 7
+    table5  bench_accuracy            per-model accuracy tables
+    kernel  bench_kernels             T1 GEMM arithmetic intensity
+    roofline bench_roofline           dry-run roofline table (pod scale)
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.full:
+        os.environ["BENCH_FAST"] = "0"
+
+    from benchmarks import (
+        bench_accuracy, bench_capacity, bench_degree_negatives, bench_kernels,
+        bench_negative_sampling, bench_overlap, bench_partitioning,
+        bench_roofline, bench_scaling,
+    )
+
+    suites = {
+        "fig3": bench_negative_sampling.run,
+        "table4": bench_degree_negatives.run,
+        "fig4": bench_overlap.run,
+        "fig5": bench_scaling.run,
+        "fig7": bench_partitioning.run,
+        "capacity": bench_capacity.run,
+        "table5": bench_accuracy.run,
+        "kernel": bench_kernels.run,
+        "roofline": bench_roofline.run,
+    }
+    wanted = [w for w in args.only.split(",") if w] or list(suites)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        t0 = time.time()
+        try:
+            suites[name]()
+        except Exception as e:  # keep the harness running
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Distributed KGE on an 8-device CPU mesh (4 machines x 2 KVStore servers):
+METIS-like vs random partitioning, exactly the paper's Fig. 7 experiment at
+miniature scale. Shows cut fraction, training loss, and throughput.
+
+    PYTHONPATH=src python examples/distributed_kge.py
+"""
+
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, "src")
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import KGEConfig
+from repro.core.distributed import build_dist_train_step, init_dist_state, make_program
+from repro.core.graph_part import cut_fraction, partition
+from repro.core.rel_part import relation_partition
+from repro.core.sampling import DistSampler
+from repro.data.kg_synth import make_synthetic_kg
+from repro.launch.mesh import make_mesh
+
+
+def run(partitioner: str, kg, cfg, mesh, steps=60):
+    book = partition(kg.train, cfg.n_entities, cfg.n_parts, method=partitioner)
+    rp = relation_partition(kg.rel_counts(), cfg.n_parts)
+    prog = make_program(cfg, book.rows_per_part, rp.slots_per_part, rp.n_shared)
+    sampler = DistSampler(kg.train, book, rp, cfg, np.random.default_rng(0))
+    step, state_sh, batch_sh = build_dist_train_step(prog, mesh)
+    with jax.set_mesh(mesh):
+        state = jax.device_put(init_dist_state(prog, jax.random.key(0)), state_sh)
+        losses, drops = [], 0
+        t0 = time.time()
+        for i in range(steps):
+            db = sampler.sample()
+            batch = {k: jax.device_put(jnp.asarray(getattr(db, k)), batch_sh[k])
+                     for k in batch_sh}
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+            drops += db.dropped_triplets
+        dt = time.time() - t0
+    cut = cut_fraction(kg.train, book.part_of)
+    print(f"{partitioner:7s}: cut {cut:5.1%}  loss {losses[0]:.3f}->{losses[-1]:.3f}  "
+          f"{steps/dt:5.1f} steps/s  dropped {drops}")
+    return cut
+
+
+def main():
+    kg = make_synthetic_kg(n_entities=4000, n_relations=60, n_edges=60_000,
+                           n_clusters=16, seed=0)
+    cfg = KGEConfig(model="transe_l2", n_entities=kg.n_entities,
+                    n_relations=kg.n_relations, dim=64, batch_size=256,
+                    neg_sample_size=64, lr=0.1, n_parts=4, remote_capacity=256)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    cm = run("metis", kg, cfg, mesh)
+    cr = run("random", kg, cfg, mesh)
+    assert cm < cr, "METIS-like partitioning must beat random on clustered graphs"
+    print("OK — min-cut partitioning reduces remote entity traffic "
+          f"({cm:.1%} vs {cr:.1%} cut)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: train TransE with DGL-KE's joint negative sampling on a small
+synthetic KG and evaluate filtered MRR. Runs in ~1 minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.common.config import KGEConfig
+from repro.core import eval as E
+from repro.core.kge_model import batch_to_device, init_state, make_train_step
+from repro.core.sampling import JointSampler
+from repro.data.kg_synth import make_synthetic_kg
+
+
+def main():
+    kg = make_synthetic_kg(n_entities=2000, n_relations=40, n_edges=40_000,
+                           n_clusters=8, seed=0)
+    cfg = KGEConfig(
+        model="transe_l2", n_entities=kg.n_entities, n_relations=kg.n_relations,
+        dim=64, gamma=10.0, batch_size=512, neg_sample_size=128,
+        neg_deg_ratio=0.5, lr=0.25, n_parts=1,
+    )
+    state = init_state(cfg, jax.random.key(0))
+    step = make_train_step(cfg)
+    sampler = JointSampler(kg.train, cfg.n_entities, cfg, np.random.default_rng(0))
+    for i in range(900):
+        state, m = step(state, batch_to_device(sampler.sample()))
+        if (i + 1) % 100 == 0:
+            print(f"step {i+1} loss {float(m['loss']):.4f}")
+    fm = E.build_filter_map(kg.triplets)
+    ranks = E.ranks_against_all(cfg, state, kg.test[:500], filter_map=fm)
+    met = E.metrics_from_ranks(ranks)
+    print("filtered eval:", met)
+    assert met.mrr > 0.2, "TransE should learn the planted structure"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

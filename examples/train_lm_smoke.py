@@ -1,0 +1,89 @@
+"""Train a (reduced) assigned architecture end-to-end on CPU: synthetic
+token stream with planted bigram structure; loss must drop below the
+unigram entropy floor — proves the whole train path (embed → scan layers →
+chunked-CE option → optimizer) learns.
+
+    PYTHONPATH=src python examples/train_lm_smoke.py --arch h2o-danube-1.8b
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+_PROBS = {}
+
+
+def bigram_stream(vocab: int, batch: int, seq: int, rng, sharp: float = 8.0):
+    """Markov chain with a sharp planted transition matrix (low entropy)."""
+    if vocab not in _PROBS:
+        g = np.random.default_rng(1234)
+        logits = g.standard_normal((vocab, vocab)) * sharp
+        p = np.exp(logits - logits.max(1, keepdims=True))
+        _PROBS[vocab] = np.cumsum(p / p.sum(1, keepdims=True), axis=1)
+    cum = _PROBS[vocab]
+    out = np.empty((batch, seq), np.int64)
+    out[:, 0] = rng.integers(0, vocab, batch)
+    for t in range(1, seq):
+        u = rng.random(batch)
+        rowcum = cum[out[:, t - 1]]
+        out[:, t] = (u[:, None] > rowcum).sum(1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--lr", type=float, default=0.0)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.models.steps import build_train_step
+    from repro.models.transformer import build_model
+
+    cfg = dataclasses.replace(get_arch(args.arch).reduced(), vocab_size=64,
+                              microbatches=1)
+    if args.lr == 0.0:
+        # SSM/hybrid dynamics want a gentler rate (dt/A recurrence)
+        args.lr = 3e-3 if cfg.mixer_pattern in ("mamba", "jamba") else 1e-2
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    step, opt = build_train_step(model, lr=args.lr)
+    opt_state = opt.init(params)
+    jstep = jax.jit(step, donate_argnums=(0, 1))
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    losses = []
+    for i in range(args.steps):
+        toks = bigram_stream(64, 8, 32, rng)
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(toks, jnp.int32)}
+        if cfg.frontend.value == "vision":
+            batch["patch_embeds"] = jnp.zeros(
+                (8, min(cfg.n_frontend_tokens, 32), cfg.d_model), jnp.float32)
+        if cfg.enc_dec:
+            batch["enc_frames"] = jnp.zeros((8, cfg.encoder_ctx, cfg.d_model),
+                                            jnp.float32)
+        params, opt_state, m = jstep(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+        if (i + 1) % 20 == 0:
+            print(f"step {i+1:4d} loss {losses[-1]:.4f} "
+                  f"({(i+1)/(time.time()-t0):.1f} steps/s)")
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(uniform={np.log(64):.3f})")
+    assert losses[-1] < np.log(64) - 0.5, "should beat the uniform floor"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Shared substrate: configs, hardware constants, sharding/tree helpers."""
+
+from repro.common.hw import TPU_V5E
+from repro.common.config import (
+    ArchConfig,
+    AttentionKind,
+    FFNKind,
+    InputShape,
+    KGEConfig,
+    MixerKind,
+    INPUT_SHAPES,
+)
+
+__all__ = [
+    "TPU_V5E",
+    "ArchConfig",
+    "AttentionKind",
+    "FFNKind",
+    "InputShape",
+    "KGEConfig",
+    "MixerKind",
+    "INPUT_SHAPES",
+]

@@ -1,0 +1,118 @@
+"""Checkpointing: sharding-aware save/restore of arbitrary pytrees.
+
+Minimal, dependency-free (no tensorstore/orbax offline): each leaf is stored
+as an ``.npy`` under a step directory, keyed by its tree path; metadata.json
+records the treedef, dtypes and step. Restore takes an abstract tree (and
+optional shardings) so arrays land directly on the right devices — the same
+contract the dry-run uses.
+
+    save_checkpoint(dir, step, {"params": params, "opt": opt_state})
+    tree = restore_checkpoint(dir, abstract_tree, shardings=sh, step=None)
+
+Used by launch/train.py (``--save-every/--resume``) and the KGE trainer.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def _safe(key: str) -> str:
+    return re.sub(r"[^\w\-\[\].]", "_", key)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    """Atomically write a step directory; prune to the newest ``keep``."""
+    out = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = out + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    meta = {"step": step, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = _safe(key) + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        meta["leaves"][key] = {"file": fname, "dtype": str(arr.dtype),
+                               "shape": list(arr.shape)}
+    with open(os.path.join(tmp, "metadata.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    if os.path.exists(out):
+        shutil.rmtree(out)
+    os.rename(tmp, out)
+    _prune(ckpt_dir, keep)
+    return out
+
+
+def _prune(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, abstract_tree, shardings=None,
+                       step: Optional[int] = None):
+    """Restore into the structure of ``abstract_tree`` (shapes validated).
+
+    ``shardings``: optional matching pytree of NamedSharding for direct
+    sharded device placement (jax.device_put per leaf)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    src = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(src, "metadata.json")) as f:
+        meta = json.load(f)
+
+    flat_abs = _flatten(abstract_tree)
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+    out_flat = {}
+    for key, aval in flat_abs.items():
+        info = meta["leaves"].get(key)
+        if info is None:
+            raise KeyError(f"checkpoint at step {step} is missing leaf {key!r}")
+        arr = np.load(os.path.join(src, info["file"]))
+        if tuple(arr.shape) != tuple(aval.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"expected {tuple(aval.shape)}")
+        sh = flat_sh.get(key)
+        out_flat[key] = jax.device_put(arr.astype(aval.dtype), sh) \
+            if sh is not None else jax.numpy.asarray(arr.astype(aval.dtype))
+    # rebuild the tree in abstract_tree's structure
+    leaves, treedef = jax.tree_util.tree_flatten(abstract_tree)
+    keys = [
+        "/".join(_path_str(p) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(abstract_tree)[0]
+    ]
+    return treedef.unflatten([out_flat[k] for k in keys])

@@ -1,0 +1,30 @@
+"""Target-hardware constants used by the roofline analysis.
+
+The runtime container is CPU-only; TPU v5e is the *target*. All roofline
+terms in benchmarks/ and launch/dryrun.py are derived from these constants
+plus the compiled HLO of the dry-run (never from CPU wall-clock).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_bf16_flops: float  # FLOP/s per chip
+    hbm_bandwidth: float  # bytes/s per chip
+    ici_link_bandwidth: float  # bytes/s per link, per direction
+    hbm_bytes: int  # HBM capacity per chip
+    vmem_bytes: int  # VMEM per core
+    mxu_dim: int  # systolic array tile dim
+
+
+TPU_V5E = HwSpec(
+    name="tpu-v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+    mxu_dim=128,
+)

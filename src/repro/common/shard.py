@@ -1,0 +1,59 @@
+"""Sharding helpers shared by the KGE core and the architecture zoo."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def tree_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    """Map a pytree of PartitionSpec to NamedSharding."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """The axes over which the global batch is sharded: ('pod','data') when a
+    pod axis exists, else ('data',)."""
+    names = tuple(mesh.axis_names)
+    return tuple(n for n in ("pod", "data") if n in names)
+
+
+def axis_size(mesh: Mesh, *names: str) -> int:
+    out = 1
+    for n in names:
+        if n in mesh.axis_names:
+            out *= mesh.shape[n]
+    return out
+
+
+def divisible(n: int, k: int) -> int:
+    """Round n up to a multiple of k."""
+    return ((n + k - 1) // k) * k
+
+
+def constraint(x, mesh: Optional[Mesh], *spec):
+    """sharding_constraint that is a no-op when mesh is None (smoke tests)."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def local_batch(global_batch: int, mesh: Optional[Mesh]) -> int:
+    if mesh is None:
+        return global_batch
+    return global_batch // axis_size(mesh, *batch_axes(mesh))
+
+
+def mesh_devices_grid(mesh: Mesh) -> np.ndarray:
+    return np.asarray(mesh.devices)

@@ -1,0 +1,30 @@
+"""DGL-KE core: the paper's contribution in JAX.
+
+scores      — Table 1 score functions, dim-shard aware
+losses      — logistic / ranking / self-adversarial
+sampling    — joint (T1), degree-based (T2), local (T3) negative sampling
+rel_part    — relation partitioning (T4)
+graph_part  — METIS-like min-cut partitioning (T3)
+kge_model   — single-machine reference training (sparse Adagrad)
+distributed — shard_map cluster training (KVStore pulls, overlap update T5)
+eval        — MRR / MR / Hit@k, both paper protocols
+"""
+
+from repro.core import scores, losses, sampling, rel_part, graph_part
+from repro.core.kge_model import KGEState, init_state, make_train_step, train_step
+from repro.core.eval import metrics_from_ranks, ranks_against_all, ranks_protocol2
+
+__all__ = [
+    "scores",
+    "losses",
+    "sampling",
+    "rel_part",
+    "graph_part",
+    "KGEState",
+    "init_state",
+    "make_train_step",
+    "train_step",
+    "metrics_from_ranks",
+    "ranks_against_all",
+    "ranks_protocol2",
+]

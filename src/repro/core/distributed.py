@@ -1,0 +1,384 @@
+"""Distributed KGE training on a TPU mesh — the paper's cluster path.
+
+Mesh layout (see DESIGN.md §4):
+  machine axis ('data', or ('pod','data') multi-pod)  ≙ DGL-KE machines,
+        each holding one METIS partition of entities + its relation partition;
+  'model' axis                                        ≙ KVStore servers inside
+        a machine: every table row is dim-striped across them.
+
+One train step, entirely inside ``jax.shard_map``:
+
+  1. pull: local entity rows (shared-memory fast path, 0 ICI) + remote rows
+     via capacity-bounded all_to_all (embeddings/kvstore.py); relations the
+     same way; split ("shared") relations read from a small replicated table.
+  2. compute: joint-negative scores (paper T1) — pairwise GEMMs over the
+     dim slice, finished by a psum over 'model'; loss; grads w.r.t. the
+     pulled workspace rows ONLY (sparse, paper §2).
+  3. push: local rows updated in place with sparse Adagrad; remote-row grads
+     returned to owners by the reverse all_to_all; shared-relation grads
+     psum'd over machines (tiny). Entity updates can be deferred one step
+     (paper T5 "overlap gradient update with batch processing").
+
+The batch buffers come from core/sampling.DistSampler (fixed shapes, -1 pads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import KGEConfig
+from repro.core import losses as L
+from repro.core import scores as S
+from repro.core.sampling import MODES
+from repro.embeddings.kvstore import KVStoreSpec, pull_local, pull_remote, push_remote_grads
+from repro.embeddings.table import emb_init_scale
+from repro.optim.sparse_adagrad import (
+    AdagradState,
+    segment_aggregate_rows,
+    sparse_adagrad_update_rows,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistKGEState:
+    """All tables are (n_parts * rows_per_part, width), machine×model sharded.
+    ``pending_*`` hold the deferred entity update (T5); zero-size when off."""
+
+    entity: jnp.ndarray
+    ent_gsq: jnp.ndarray
+    r_emb: jnp.ndarray
+    rel_gsq: jnp.ndarray
+    r_proj: Optional[jnp.ndarray]
+    proj_gsq: Optional[jnp.ndarray]
+    shared_rel: jnp.ndarray  # (n_shared_pad, rel_dim) replicated over machines
+    shared_gsq: jnp.ndarray
+    pend_ids: jnp.ndarray  # (P, Lp) machine-local row ids, -1 pad
+    pend_grads: jnp.ndarray  # (P, Lp, d)
+    step: jnp.ndarray
+
+
+def machine_axis_of(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def n_machines(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in machine_axis_of(mesh)]))
+
+
+@dataclasses.dataclass(frozen=True)
+class DistKGEProgram:
+    """Shapes + shardings for one (cfg, mesh) pair; builds the jitted step."""
+
+    cfg: KGEConfig
+    rows_per_part: int  # entity rows per machine
+    rel_slots: int  # owned relation slots per machine
+    n_shared: int  # shared (split) relations, padded
+    L: int  # entity workspace local slots
+    Rp: int  # remote entity rows per peer
+    Lr: int
+    Rrp: int
+
+    def state_shapes(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        P_ = cfg.n_parts
+        f32 = jnp.float32
+        ent = (P_ * self.rows_per_part, cfg.dim)
+        rel = (P_ * self.rel_slots, cfg.rel_dim)
+        out = {
+            "entity": jax.ShapeDtypeStruct(ent, f32),
+            "ent_gsq": jax.ShapeDtypeStruct(ent, f32),
+            "r_emb": jax.ShapeDtypeStruct(rel, f32),
+            "rel_gsq": jax.ShapeDtypeStruct(rel, f32),
+            "shared_rel": jax.ShapeDtypeStruct((self.n_shared, cfg.rel_dim), f32),
+            "shared_gsq": jax.ShapeDtypeStruct((self.n_shared, cfg.rel_dim), f32),
+            "pend_ids": jax.ShapeDtypeStruct((P_, self.pend_slots), jnp.int32),
+            "pend_grads": jax.ShapeDtypeStruct((P_, self.pend_slots, cfg.dim), f32),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        if cfg.model in ("transr", "rescal"):
+            proj = (P_ * self.rel_slots, cfg.dim * cfg.rel_dim)
+            out["r_proj"] = jax.ShapeDtypeStruct(proj, f32)
+            out["proj_gsq"] = jax.ShapeDtypeStruct(proj, f32)
+        return out
+
+    @property
+    def pend_slots(self) -> int:
+        # deferred update rows: all local slots + all remote arrivals
+        return self.L + self.cfg.n_parts * self.Rp
+
+    def batch_shapes(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        P_, b = cfg.n_parts, cfg.batch_size
+        i32 = jnp.int32
+        ng, k = cfg.n_neg_groups, cfg.neg_sample_size
+        return {
+            "ent_local_ids": jax.ShapeDtypeStruct((P_, self.L), i32),
+            "ent_remote_req": jax.ShapeDtypeStruct((P_, P_, self.Rp), i32),
+            "h_slot": jax.ShapeDtypeStruct((P_, b), i32),
+            "t_slot": jax.ShapeDtypeStruct((P_, b), i32),
+            "neg_slot": jax.ShapeDtypeStruct((P_, MODES, ng, k), i32),
+            "rel_local_ids": jax.ShapeDtypeStruct((P_, self.Lr), i32),
+            "rel_remote_req": jax.ShapeDtypeStruct((P_, P_, self.Rrp), i32),
+            "rel_slot": jax.ShapeDtypeStruct((P_, b), i32),
+            "rel_shared": jax.ShapeDtypeStruct((P_, b), i32),
+        }
+
+
+def make_program(cfg: KGEConfig, rows_per_part: int, rel_slots: int,
+                 n_shared: int) -> DistKGEProgram:
+    k = cfg.neg_sample_size
+    L = 3 * cfg.batch_size + MODES * cfg.n_neg_groups * k
+    Rp = max(1, cfg.remote_capacity // cfg.n_parts)
+    Lr = cfg.batch_size
+    Rrp = max(1, max(8, cfg.remote_capacity // 8) // cfg.n_parts)
+    return DistKGEProgram(
+        cfg=cfg, rows_per_part=rows_per_part, rel_slots=rel_slots,
+        n_shared=max(8, n_shared), L=L, Rp=Rp, Lr=Lr, Rrp=Rrp,
+    )
+
+
+# ---------------------------------------------------------------------------
+def _device_step(prog: DistKGEProgram, machine_axis, state: Dict, batch: Dict,
+                 pairwise_fn=None, n_servers: int = 1):
+    """Per-device body (inside shard_map). All tensors are local blocks:
+    entity (rows_per_part, d/S), batch arrays squeezed of the machine axis."""
+    cfg = prog.cfg
+    spec = KVStoreSpec(machine_axis=machine_axis, n_parts=cfg.n_parts,
+                       remote_capacity=cfg.remote_capacity,
+                       comm_dtype=cfg.comm_dtype)
+    ctx = S.ShardCtx("model")
+    scale = emb_init_scale(cfg)
+    sq = lambda x: jnp.squeeze(x, axis=0)  # drop size-1 machine axis
+
+    # ---- T5: apply the deferred entity update from the previous step.
+    # The pulls below read the POST-update table: reading the pre-update
+    # table (the literal paper semantics) forces XLA into a copy-on-write of
+    # the full entity + Adagrad tables — a 2.2 GB/step HBM tax at Freebase
+    # scale (EXPERIMENTS.md §Perf hillclimb 3). Reading post-update keeps the
+    # one-step deferral of gradient application (the overlap) with *fresher*
+    # rows, and the scatter becomes a true in-place update.
+    pend_ids, pend_grads = sq(state["pend_ids"]), sq(state["pend_grads"])
+    uid, agg = segment_aggregate_rows(pend_ids, pend_grads, pend_ids.shape[0])
+    new_ent, ent_ada = sparse_adagrad_update_rows(
+        state["entity"], AdagradState(state["ent_gsq"]), uid, agg, cfg.lr
+    )
+
+    # ---- 1. pull entity + relation workspaces
+    local_ids = sq(batch["ent_local_ids"])
+    remote_req = sq(batch["ent_remote_req"])
+    ws_local = pull_local(new_ent, local_ids)  # (L, ds)
+    ws_remote = pull_remote(new_ent, remote_req, spec)  # (P*Rp, ds)
+    ws = jnp.concatenate([ws_local, ws_remote], axis=0)
+
+    rel_local_ids = sq(batch["rel_local_ids"])
+    rel_req = sq(batch["rel_remote_req"])
+    rel_ws = jnp.concatenate(
+        [pull_local(state["r_emb"], rel_local_ids),
+         pull_remote(state["r_emb"], rel_req, spec)], axis=0)
+    proj_ws = None
+    if "r_proj" in state:
+        proj_ws = jnp.concatenate(
+            [pull_local(state["r_proj"], rel_local_ids),
+             pull_remote(state["r_proj"], rel_req, spec)], axis=0)
+
+    h_slot, t_slot = sq(batch["h_slot"]), sq(batch["t_slot"])
+    rel_slot, rel_shared = sq(batch["rel_slot"]), sq(batch["rel_shared"])
+    neg_slot = sq(batch["neg_slot"])  # (MODES, ng, k)
+    shared_rows = state["shared_rel"][jnp.maximum(rel_shared, 0)]
+    is_shared = (rel_shared >= 0)[:, None]
+
+    # ---- 2. compute loss + grads w.r.t. workspace rows (sparse!)
+    def loss_fn(ws_, rel_ws_, shared_rows_, proj_ws_):
+        h = ws_[h_slot]
+        t = ws_[t_slot]
+        r_owned = rel_ws_[rel_slot]
+        r = jnp.where(is_shared, shared_rows_, r_owned)
+        pr = None if proj_ws_ is None else proj_ws_[rel_slot]
+        pos = S.positive_score(cfg.model, h, r, t, cfg.gamma, ctx,
+                               r_proj=pr, rel_dim=cfg.rel_dim, emb_scale=scale)
+        b = h.shape[0]
+        ng, k = cfg.n_neg_groups, cfg.neg_sample_size
+        gsz = b // ng
+        # negative-sharding (EXPERIMENTS.md §Perf hillclimb 3): local (b, k/S)
+        # score slices + scalar loss psum, instead of psum-ing (b, k) scores.
+        sharded = (cfg.model not in ("transr", "rescal")
+                   and cfg.loss in ("logistic", "ranking")
+                   and k % n_servers == 0)
+        neg_out = []
+        for m in range(MODES):
+            corrupt = "tail" if m == 0 else "head"
+            e = (h if m == 0 else t).reshape(ng, gsz, -1)
+            rg = r.reshape(ng, gsz, -1)
+            prg = None if pr is None else pr.reshape(ng, gsz, -1)
+            negs = ws_[neg_slot[m]]  # (ng, k, ds)
+
+            if sharded:
+                f = jax.vmap(lambda e1, r1, n1: S.negative_score_sharded(
+                    cfg.model, e1, r1, n1, corrupt, cfg.gamma, ctx,
+                    emb_scale=scale, pairwise_fn=pairwise_fn,
+                    wire_dtype=cfg.comm_dtype))
+                neg_out.append(f(e, rg, negs))  # (ng, gsz, k/S) local
+            else:
+                f = jax.vmap(lambda e1, r1, n1, p1=prg: S.negative_score(
+                    cfg.model, e1, r1, n1, corrupt, cfg.gamma, ctx,
+                    r_proj=None if prg is None else p1, rel_dim=cfg.rel_dim,
+                    emb_scale=scale, pairwise_fn=pairwise_fn),
+                    in_axes=(0, 0, 0) if prg is None else (0, 0, 0, 0))
+                neg_out.append(f(e, rg, negs) if prg is None
+                               else f(e, rg, negs, prg))
+        neg = jnp.stack(neg_out)  # (MODES, ng, gsz, k or k/S)
+        if sharded:
+            # scalar-reduced loss: identical value on every server
+            posf = jnp.concatenate([pos, pos])
+            if cfg.loss == "logistic":
+                neg_sum = jax.lax.psum(jnp.sum(jax.nn.softplus(neg)), "model")
+                loss = jnp.mean(jax.nn.softplus(-posf)) + neg_sum / (MODES * b * k)
+            else:  # ranking: pair each positive with its group's negatives
+                p2 = jnp.stack([pos, pos]).reshape(MODES, ng, gsz, 1)
+                h_ = jnp.maximum(0.0, cfg.gamma - p2 + neg)
+                loss = jax.lax.psum(jnp.sum(h_), "model") / (MODES * b * k)
+            neg_mean = jax.lax.psum(jnp.sum(neg), "model") / (MODES * b * k)
+            return loss, (jnp.mean(pos), neg_mean)
+        loss = L.kge_loss(cfg.loss, jnp.concatenate([pos, pos]),
+                          neg.reshape(MODES * b, -1), margin=cfg.gamma)
+        return loss, (jnp.mean(pos), jnp.mean(neg))
+
+    grad_args = (0, 1, 2) + ((3,) if proj_ws is not None else ())
+    (loss, (pos_m, neg_m)), grads = jax.value_and_grad(
+        loss_fn, argnums=grad_args, has_aux=True
+    )(ws, rel_ws, shared_rows, proj_ws)
+    g_ws, g_rel, g_shared_rows = grads[0], grads[1], grads[2]
+
+    # ---- 3a. entity updates: local now-or-deferred, remote pushed to owner
+    Lsz = prog.L
+    g_local, g_remote = g_ws[:Lsz], g_ws[Lsz:]
+    owner_ids, owner_grads = push_remote_grads(g_remote, remote_req, spec)
+    all_ids = jnp.concatenate([local_ids, owner_ids]).astype(jnp.int32)
+    all_grads = jnp.concatenate([g_local, owner_grads], axis=0)
+    if cfg.overlap_update:
+        # defer: becomes pend_* for the next step (paper T5)
+        new_pend_ids, new_pend_grads = all_ids, all_grads
+        ent_out, ent_gsq_out = new_ent, ent_ada.gsq
+    else:
+        uid2, agg2 = segment_aggregate_rows(all_ids, all_grads, all_ids.shape[0])
+        ent_out, ada2 = sparse_adagrad_update_rows(
+            new_ent, ent_ada, uid2, agg2, cfg.lr)
+        ent_gsq_out = ada2.gsq
+        new_pend_ids = jnp.full_like(pend_ids, -1)
+        new_pend_grads = jnp.zeros_like(pend_grads)
+
+    # ---- 3b. relation updates (owned: local; remote: push back; trainer-
+    # immediate per the paper — relations are never deferred)
+    def rel_update(table, gsq, g_rel_ws, req):
+        g_loc, g_rem = g_rel_ws[: prog.Lr], g_rel_ws[prog.Lr:]
+        oid, ograds = push_remote_grads(g_rem, req, spec)
+        ids = jnp.concatenate([rel_local_ids, oid]).astype(jnp.int32)
+        gs = jnp.concatenate([g_loc, ograds], axis=0)
+        u, a = segment_aggregate_rows(ids, gs, ids.shape[0])
+        return sparse_adagrad_update_rows(table, AdagradState(gsq), u, a, cfg.lr)
+
+    new_rel, rel_ada = rel_update(state["r_emb"], state["rel_gsq"], g_rel, rel_req)
+    out = dict(state)
+    if proj_ws is not None:
+        g_proj = grads[3]
+        new_proj, proj_ada = rel_update(state["r_proj"], state["proj_gsq"],
+                                        g_proj, rel_req)
+        out["r_proj"], out["proj_gsq"] = new_proj, proj_ada.gsq
+
+    # ---- 3c. shared (split) relations: scatter + psum over machines (tiny)
+    g_shared = jnp.zeros_like(state["shared_rel"]).at[
+        jnp.maximum(rel_shared, 0)
+    ].add(jnp.where(is_shared, g_shared_rows, 0.0))
+    g_shared = jax.lax.psum(g_shared, machine_axis)
+    sh_gsq = state["shared_gsq"] + jnp.square(g_shared)
+    denom = jnp.sqrt(sh_gsq) + 1e-10
+    new_shared = state["shared_rel"] - cfg.lr * g_shared / denom
+
+    out.update(
+        entity=ent_out, ent_gsq=ent_gsq_out, r_emb=new_rel, rel_gsq=rel_ada.gsq,
+        shared_rel=new_shared, shared_gsq=sh_gsq,
+        pend_ids=new_pend_ids[None], pend_grads=new_pend_grads[None],
+        step=state["step"] + 1,
+    )
+    metrics = {
+        "loss": jax.lax.pmean(loss, machine_axis),
+        "pos_score": jax.lax.pmean(pos_m, machine_axis),
+        "neg_score": jax.lax.pmean(neg_m, machine_axis),
+    }
+    return out, metrics
+
+
+def build_dist_train_step(prog: DistKGEProgram, mesh: Mesh, pairwise_fn=None):
+    """Returns jit(train_step)(state_dict, batch_dict) -> (state_dict, metrics)."""
+    cfg = prog.cfg
+    maxis = machine_axis_of(mesh)
+    assert n_machines(mesh) == cfg.n_parts, (
+        f"cfg.n_parts={cfg.n_parts} must equal machine-axis size {n_machines(mesh)}")
+
+    mp = P(maxis, "model")  # machine-row × dim-striped tables
+    state_specs = {
+        "entity": mp, "ent_gsq": mp, "r_emb": mp, "rel_gsq": mp,
+        "shared_rel": P(None, "model"), "shared_gsq": P(None, "model"),
+        "pend_ids": P(maxis, None), "pend_grads": P(maxis, None, "model"),
+        "step": P(),
+    }
+    if cfg.model in ("transr", "rescal"):
+        state_specs["r_proj"] = mp
+        state_specs["proj_gsq"] = mp
+    batch_specs = {
+        "ent_local_ids": P(maxis, None),
+        "ent_remote_req": P(maxis, None, None),
+        "h_slot": P(maxis, None),
+        "t_slot": P(maxis, None),
+        "neg_slot": P(maxis, None, None, None),
+        "rel_local_ids": P(maxis, None),
+        "rel_remote_req": P(maxis, None, None),
+        "rel_slot": P(maxis, None),
+        "rel_shared": P(maxis, None),
+    }
+    metric_specs = {"loss": P(), "pos_score": P(), "neg_score": P()}
+
+    body = functools.partial(_device_step, prog, maxis, pairwise_fn=pairwise_fn,
+                             n_servers=int(mesh.shape["model"]))
+    smapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(state_specs, batch_specs),
+        out_specs=(state_specs, metric_specs),
+        check_vma=False,
+    )
+    state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(smapped, donate_argnums=(0,)), state_sh, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), batch_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def init_dist_state(prog: DistKGEProgram, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    cfg = prog.cfg
+    s = emb_init_scale(cfg)
+    shapes = prog.state_shapes()
+    ks = jax.random.split(key, 4)
+    out = {}
+    for name, sd in shapes.items():
+        if name in ("entity", "r_emb", "shared_rel"):
+            i = ["entity", "r_emb", "shared_rel"].index(name)
+            out[name] = jax.random.uniform(ks[i], sd.shape, sd.dtype, -s, s)
+        elif name == "r_proj":
+            p = jax.random.uniform(ks[3], sd.shape, sd.dtype, -s, s)
+            if cfg.model == "transr":
+                eye = jnp.eye(cfg.dim, cfg.rel_dim, dtype=jnp.float32).reshape(-1)
+                p = p * 0.1 + eye
+            out[name] = p
+        elif name == "pend_ids":
+            out[name] = jnp.full(sd.shape, -1, sd.dtype)
+        else:
+            out[name] = jnp.zeros(sd.shape, sd.dtype)
+    return out

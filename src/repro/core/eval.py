@@ -1,0 +1,177 @@
+"""Link-prediction evaluation (paper §5.3): Hit@k, MR, MRR.
+
+Two protocols, as in the paper:
+  * protocol 1 (FB15k/WN18): rank the positive against *all* entities,
+    filtered — candidate triplets that exist in the dataset are removed.
+  * protocol 2 (Freebase): rank against 2000 sampled negatives — 1000
+    uniform + 1000 degree-proportional — unfiltered.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import KGEConfig
+from repro.core import scores as S
+from repro.core.kge_model import KGEState
+from repro.embeddings.table import emb_init_scale
+
+
+@dataclasses.dataclass
+class Metrics:
+    mrr: float
+    mr: float
+    hits1: float
+    hits3: float
+    hits10: float
+    n: int
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    def __str__(self):
+        return (
+            f"MRR {self.mrr:.4f} | MR {self.mr:.1f} | Hit@1 {self.hits1:.4f} "
+            f"| Hit@3 {self.hits3:.4f} | Hit@10 {self.hits10:.4f} (n={self.n})"
+        )
+
+
+def _candidate_scores(
+    cfg: KGEConfig, state: KGEState, h, r, t, cand, corrupt: str
+) -> jnp.ndarray:
+    """Scores of (q, C) candidate corruptions. cand: (C,) or (q, C)."""
+    scale = emb_init_scale(cfg)
+    ctx = S.ShardCtx(None)
+    e = state.entity[h if corrupt == "tail" else t]
+    rr = state.r_emb[r]
+    pr = None if state.r_proj is None else state.r_proj[r]
+    if cand.ndim == 1:
+        return S.negative_score(
+            cfg.model, e, rr, state.entity[cand], corrupt, cfg.gamma, ctx,
+            r_proj=pr, rel_dim=cfg.rel_dim, emb_scale=scale,
+        )
+    # per-query candidates: vmap over queries
+    def one(e1, r1, c, p1):
+        return S.negative_score(
+            cfg.model, e1[None], r1[None], state.entity[c], corrupt, cfg.gamma,
+            ctx, r_proj=None if p1 is None else p1[None],
+            rel_dim=cfg.rel_dim, emb_scale=scale,
+        )[0]
+
+    return jax.vmap(one, in_axes=(0, 0, 0, None if pr is None else 0))(e, rr, cand, pr)
+
+
+def _pos_scores(cfg, state, h, r, t) -> jnp.ndarray:
+    scale = emb_init_scale(cfg)
+    pr = None if state.r_proj is None else state.r_proj[r]
+    return S.positive_score(
+        cfg.model, state.entity[h], state.r_emb[r], state.entity[t],
+        cfg.gamma, S.ShardCtx(None), r_proj=pr, rel_dim=cfg.rel_dim,
+        emb_scale=scale,
+    )
+
+
+def ranks_against_all(
+    cfg: KGEConfig,
+    state: KGEState,
+    test: np.ndarray,
+    filter_map: Optional[Dict] = None,
+    chunk: int = 512,
+) -> np.ndarray:
+    """Protocol 1 ranks (both corruption sides), optionally filtered.
+
+    filter_map: {('t', h, r): set(tails), ('h', t, r): set(heads)} of known
+    true triplets to exclude.
+    """
+    all_ents = jnp.arange(cfg.n_entities, dtype=jnp.int32)
+    ranks = []
+    for corrupt in ("tail", "head"):
+        f = jax.jit(
+            lambda h, r, t: (
+                _candidate_scores(cfg, state, h, r, t, all_ents, corrupt),
+                _pos_scores(cfg, state, h, r, t),
+            )
+        )
+        for i in range(0, test.shape[0], chunk):
+            ch = test[i : i + chunk]
+            h = jnp.asarray(ch[:, 0], jnp.int32)
+            r = jnp.asarray(ch[:, 1], jnp.int32)
+            t = jnp.asarray(ch[:, 2], jnp.int32)
+            cand_s, pos_s = f(h, r, t)
+            cand_s = np.asarray(cand_s)
+            pos_s = np.asarray(pos_s)
+            for q in range(ch.shape[0]):
+                s = cand_s[q]
+                if filter_map is not None:
+                    key = ("t", int(ch[q, 0]), int(ch[q, 1])) if corrupt == "tail" else (
+                        "h", int(ch[q, 2]), int(ch[q, 1]))
+                    known = filter_map.get(key)
+                    if known:
+                        s = s.copy()
+                        s[list(known)] = -np.inf
+                rank = 1 + int(np.sum(s > pos_s[q]))
+                ranks.append(rank)
+    return np.asarray(ranks)
+
+
+def ranks_protocol2(
+    cfg: KGEConfig,
+    state: KGEState,
+    test: np.ndarray,
+    degrees: np.ndarray,
+    n_uniform: int = 1000,
+    n_degree: int = 1000,
+    rng: Optional[np.random.Generator] = None,
+    chunk: int = 256,
+) -> np.ndarray:
+    """Protocol 2 (Freebase): 2000 sampled negatives, unfiltered."""
+    rng = rng or np.random.default_rng(0)
+    p = degrees / degrees.sum()
+    ranks = []
+    for corrupt in ("tail", "head"):
+        f = jax.jit(
+            lambda h, r, t, cand: (
+                _candidate_scores(cfg, state, h, r, t, cand, corrupt),
+                _pos_scores(cfg, state, h, r, t),
+            )
+        )
+        for i in range(0, test.shape[0], chunk):
+            ch = test[i : i + chunk]
+            q = ch.shape[0]
+            uni = rng.integers(0, cfg.n_entities, size=(q, n_uniform))
+            deg = rng.choice(cfg.n_entities, size=(q, n_degree), p=p)
+            cand = jnp.asarray(np.concatenate([uni, deg], axis=1), jnp.int32)
+            cand_s, pos_s = f(
+                jnp.asarray(ch[:, 0], jnp.int32),
+                jnp.asarray(ch[:, 1], jnp.int32),
+                jnp.asarray(ch[:, 2], jnp.int32),
+                cand,
+            )
+            rank = 1 + np.sum(np.asarray(cand_s) > np.asarray(pos_s)[:, None], axis=1)
+            ranks.extend(rank.tolist())
+    return np.asarray(ranks)
+
+
+def metrics_from_ranks(ranks: np.ndarray) -> Metrics:
+    r = ranks.astype(np.float64)
+    return Metrics(
+        mrr=float(np.mean(1.0 / r)),
+        mr=float(np.mean(r)),
+        hits1=float(np.mean(r <= 1)),
+        hits3=float(np.mean(r <= 3)),
+        hits10=float(np.mean(r <= 10)),
+        n=int(r.size),
+    )
+
+
+def build_filter_map(triplets: np.ndarray) -> Dict:
+    fm: Dict = {}
+    for h, r, t in triplets:
+        fm.setdefault(("t", int(h), int(r)), set()).add(int(t))
+        fm.setdefault(("h", int(t), int(r)), set()).add(int(h))
+    return fm

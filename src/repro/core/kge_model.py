@@ -1,0 +1,251 @@
+"""Single-machine KGE training (the paper's many-core path, minus Hogwild).
+
+This module is the reference implementation used by tests, benchmarks and the
+CPU-trainable examples. It already exercises T1/T2 (joint + in-batch negative
+sampling) and sparse Adagrad row updates; the mesh version in
+core/distributed.py adds T3/T4/T6 (METIS locality, relation partitioning,
+KVStore collectives) and T5 (deferred/overlapped entity updates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import KGEConfig
+from repro.core import losses as L
+from repro.core import scores as S
+from repro.core.sampling import MODES, KGBatch
+from repro.embeddings.table import emb_init_scale
+from repro.optim.sparse_adagrad import (
+    AdagradState,
+    segment_aggregate_rows,
+    sparse_adagrad_update_rows,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KGEState:
+    entity: jnp.ndarray  # (n_entities, d)
+    ent_gsq: jnp.ndarray
+    r_emb: jnp.ndarray  # (n_relations, rel_dim)
+    rel_gsq: jnp.ndarray
+    r_proj: Optional[jnp.ndarray]  # (n_relations, d*rel_dim) TransR/RESCAL
+    proj_gsq: Optional[jnp.ndarray]
+    step: jnp.ndarray
+
+
+def init_state(cfg: KGEConfig, key: jax.Array) -> KGEState:
+    s = emb_init_scale(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    ent = jax.random.uniform(k1, (cfg.n_entities, cfg.dim), jnp.float32, -s, s)
+    rel = jax.random.uniform(k2, (cfg.n_relations, cfg.rel_dim), jnp.float32, -s, s)
+    proj = None
+    if cfg.model in ("transr", "rescal"):
+        proj = jax.random.uniform(
+            k3, (cfg.n_relations, cfg.dim * cfg.rel_dim), jnp.float32, -s, s
+        )
+        if cfg.model == "transr":
+            eye = jnp.eye(cfg.dim, cfg.rel_dim, dtype=jnp.float32).reshape(-1)
+            proj = proj * 0.1 + eye
+    return KGEState(
+        entity=ent,
+        ent_gsq=jnp.zeros_like(ent),
+        r_emb=rel,
+        rel_gsq=jnp.zeros_like(rel),
+        r_proj=proj,
+        proj_gsq=None if proj is None else jnp.zeros_like(proj),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _needs_proj(cfg: KGEConfig) -> bool:
+    return cfg.model in ("transr", "rescal")
+
+
+def batch_scores(
+    cfg: KGEConfig,
+    h_rows: jnp.ndarray,  # (b, d)
+    r_rows: jnp.ndarray,  # (b, rel_dim)
+    t_rows: jnp.ndarray,  # (b, d)
+    neg_rows: jnp.ndarray,  # (MODES, ng, k, d)
+    proj_rows: Optional[jnp.ndarray] = None,  # (b, d*rel_dim)
+    ctx: S.ShardCtx = S.ShardCtx(None),
+    pairwise_fn=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (pos_scores (b,), neg_scores (MODES, ng, gsz, k))."""
+    scale = emb_init_scale(cfg)
+    pos = S.positive_score(
+        cfg.model, h_rows, r_rows, t_rows, cfg.gamma, ctx,
+        r_proj=proj_rows, rel_dim=cfg.rel_dim, emb_scale=scale,
+    )
+    ng = neg_rows.shape[1]
+    b = h_rows.shape[0]
+    gsz = b // ng
+
+    def per_group(e, r, negs, pr):
+        return S.negative_score(
+            cfg.model, e, r, negs, corrupt, cfg.gamma, ctx,
+            r_proj=pr, rel_dim=cfg.rel_dim, emb_scale=scale,
+            pairwise_fn=pairwise_fn,
+        )
+
+    neg_out = []
+    for m in range(MODES):
+        corrupt = "tail" if m == 0 else "head"
+        e = (h_rows if m == 0 else t_rows).reshape(ng, gsz, -1)
+        r = r_rows.reshape(ng, gsz, -1)
+        pr = None if proj_rows is None else proj_rows.reshape(ng, gsz, -1)
+        negs = neg_rows[m]  # (ng, k, d)
+        f = jax.vmap(per_group, in_axes=(0, 0, 0, None if pr is None else 0))
+        neg_out.append(f(e, r, negs, pr))  # (ng, gsz, k)
+    return pos, jnp.stack(neg_out)
+
+
+def loss_on_rows(cfg, h_rows, r_rows, t_rows, neg_rows, proj_rows=None,
+                 ctx=S.ShardCtx(None), pairwise_fn=None):
+    pos, neg = batch_scores(cfg, h_rows, r_rows, t_rows, neg_rows, proj_rows,
+                            ctx, pairwise_fn)
+    b = h_rows.shape[0]
+    negf = neg.reshape(MODES * b, -1)  # pair each positive w/ its group negs
+    posf = jnp.concatenate([pos, pos])
+    loss = L.kge_loss(cfg.loss, posf, negf, margin=cfg.gamma)
+    return loss, (pos, neg)
+
+
+def train_step(
+    cfg: KGEConfig,
+    state: KGEState,
+    batch: Dict[str, jnp.ndarray],
+    pairwise_fn=None,
+) -> Tuple[KGEState, Dict[str, jnp.ndarray]]:
+    """One sparse mini-batch step (jit-able; batch arrays are device arrays).
+
+    batch: h, r, t (b,), neg (MODES, ng, k).
+    """
+    h_ids, r_ids, t_ids, neg_ids = batch["h"], batch["r"], batch["t"], batch["neg"]
+    h_rows = state.entity[h_ids]
+    t_rows = state.entity[t_ids]
+    r_rows = state.r_emb[r_ids]
+    neg_rows = state.entity[neg_ids]
+    proj_rows = None if state.r_proj is None else state.r_proj[r_ids]
+
+    def f(hr, tr, rr, nr, pr):
+        return loss_on_rows(cfg, hr, rr, tr, nr, pr, pairwise_fn=pairwise_fn)
+
+    grad_fn = jax.value_and_grad(f, argnums=(0, 1, 2, 3) + ((4,) if proj_rows is not None else ()),
+                                 has_aux=True)
+    (loss, (pos, neg)), grads = grad_fn(h_rows, t_rows, r_rows, neg_rows, proj_rows)
+    gh, gt, gr, gn = grads[:4]
+
+    # ---- sparse Adagrad on entity rows (dedup + aggregate first)
+    ent_ids = jnp.concatenate([h_ids, t_ids, neg_ids.reshape(-1)]).astype(jnp.int32)
+    ent_grads = jnp.concatenate([gh, gt, gn.reshape(-1, cfg.dim)])
+    uid, agg = segment_aggregate_rows(ent_ids, ent_grads, cfg.n_entities)
+    new_ent, ent_state = sparse_adagrad_update_rows(
+        state.entity, AdagradState(state.ent_gsq), uid, agg, cfg.lr
+    )
+
+    # ---- relations
+    rid, ragg = segment_aggregate_rows(r_ids.astype(jnp.int32), gr, cfg.n_relations)
+    new_rel, rel_state = sparse_adagrad_update_rows(
+        state.r_emb, AdagradState(state.rel_gsq), rid, ragg, cfg.lr
+    )
+    new_proj, proj_gsq = state.r_proj, state.proj_gsq
+    if proj_rows is not None:
+        gp = grads[4]
+        pid, pagg = segment_aggregate_rows(r_ids.astype(jnp.int32), gp, cfg.n_relations)
+        new_proj, pstate = sparse_adagrad_update_rows(
+            state.r_proj, AdagradState(state.proj_gsq), pid, pagg, cfg.lr
+        )
+        proj_gsq = pstate.gsq
+
+    new_state = KGEState(
+        entity=new_ent,
+        ent_gsq=ent_state.gsq,
+        r_emb=new_rel,
+        rel_gsq=rel_state.gsq,
+        r_proj=new_proj,
+        proj_gsq=proj_gsq,
+        step=state.step + 1,
+    )
+    metrics = {
+        "loss": loss,
+        "pos_score": jnp.mean(pos),
+        "neg_score": jnp.mean(neg),
+    }
+    return new_state, metrics
+
+
+def make_train_step(cfg: KGEConfig, pairwise_fn=None):
+    return jax.jit(functools.partial(train_step, cfg, pairwise_fn=pairwise_fn))
+
+
+def batch_to_device(batch: KGBatch) -> Dict[str, jnp.ndarray]:
+    return {
+        "h": jnp.asarray(batch.h, jnp.int32),
+        "r": jnp.asarray(batch.r, jnp.int32),
+        "t": jnp.asarray(batch.t, jnp.int32),
+        "neg": jnp.asarray(batch.neg, jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# Naive baseline step: independent negatives per triplet (paper's strawman).
+# Memory/compute O(b*k*d) — used by benchmarks/bench_negative_sampling.py.
+# --------------------------------------------------------------------------
+def naive_train_step(cfg: KGEConfig, state: KGEState, batch):
+    h_ids, r_ids, t_ids, neg_ids = batch["h"], batch["r"], batch["t"], batch["neg"]
+    scale = emb_init_scale(cfg)
+    ctx = S.ShardCtx(None)
+
+    def f(hr, tr, rr, nr):
+        pos = S.positive_score(cfg.model, hr, rr, tr, cfg.gamma, ctx, emb_scale=scale)
+        outs = []
+        for m in range(MODES):
+            corrupt = "tail" if m == 0 else "head"
+            e = hr if m == 0 else tr
+            o = S.neg_o(cfg.model, e, rr, corrupt, ctx, emb_scale=scale)
+            mode = S.PAIRWISE_OF[cfg.model]
+            if mode == "dot":
+                part = jnp.einsum("bd,bkd->bk", o, nr[m])
+            elif mode == "l2sq":
+                part = jnp.sum(jnp.square(o[:, None, :] - nr[m]), axis=-1)
+            else:
+                part = jnp.sum(jnp.abs(o[:, None, :] - nr[m]), axis=-1)
+            outs.append(S.finish_neg_scores(cfg.model, part, cfg.gamma, ctx))
+        neg = jnp.stack(outs)  # (MODES, b, k)
+        loss = L.kge_loss(cfg.loss, jnp.concatenate([pos, pos]),
+                          neg.reshape(2 * hr.shape[0], -1), margin=cfg.gamma)
+        return loss
+
+    h_rows, t_rows = state.entity[h_ids], state.entity[t_ids]
+    r_rows, neg_rows = state.r_emb[r_ids], state.entity[neg_ids]
+    loss, grads = jax.value_and_grad(f, argnums=(0, 1, 2, 3))(
+        h_rows, t_rows, r_rows, neg_rows
+    )
+    gh, gt, gr, gn = grads
+    ent_ids = jnp.concatenate([h_ids, t_ids, neg_ids.reshape(-1)]).astype(jnp.int32)
+    ent_grads = jnp.concatenate([gh, gt, gn.reshape(-1, cfg.dim)])
+    uid, agg = segment_aggregate_rows(ent_ids, ent_grads, cfg.n_entities)
+    new_ent, ent_state = sparse_adagrad_update_rows(
+        state.entity, AdagradState(state.ent_gsq), uid, agg, cfg.lr
+    )
+    rid, ragg = segment_aggregate_rows(r_ids.astype(jnp.int32), gr, cfg.n_relations)
+    new_rel, rel_state = sparse_adagrad_update_rows(
+        state.r_emb, AdagradState(state.rel_gsq), rid, ragg, cfg.lr
+    )
+    return dataclasses.replace(
+        state,
+        entity=new_ent,
+        ent_gsq=ent_state.gsq,
+        r_emb=new_rel,
+        rel_gsq=rel_state.gsq,
+        step=state.step + 1,
+    ), {"loss": loss}

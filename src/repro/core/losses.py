@@ -1,0 +1,50 @@
+"""KGE losses (paper §2): logistic and pairwise ranking, plus the
+self-adversarial negative weighting of the RotatE codebase DGL-KE builds on."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def logistic_loss(pos_scores: jnp.ndarray, neg_scores: jnp.ndarray) -> jnp.ndarray:
+    """softplus(-y * f): y=+1 positives, y=-1 negatives. Mean over all."""
+    lp = jax.nn.softplus(-pos_scores)
+    ln = jax.nn.softplus(neg_scores)
+    return jnp.mean(lp) + jnp.mean(ln)
+
+
+def ranking_loss(
+    pos_scores: jnp.ndarray, neg_scores: jnp.ndarray, margin: float = 1.0
+) -> jnp.ndarray:
+    """max(0, margin - f(pos) + f(neg)), pos broadcast against its negatives.
+
+    pos: (b,), neg: (b, k) — each positive paired with its negative set.
+    """
+    viol = jnp.maximum(0.0, margin - pos_scores[:, None] + neg_scores)
+    return jnp.mean(viol)
+
+
+def self_adversarial_loss(
+    pos_scores: jnp.ndarray, neg_scores: jnp.ndarray, temperature: float = 1.0
+) -> jnp.ndarray:
+    """RotatE-style: negatives weighted by softmax(T * f(neg)), stop-grad."""
+    w = jax.nn.softmax(temperature * jax.lax.stop_gradient(neg_scores), axis=-1)
+    lp = jax.nn.softplus(-pos_scores)
+    ln = jnp.sum(w * jax.nn.softplus(neg_scores), axis=-1)
+    return jnp.mean(lp) + jnp.mean(ln)
+
+
+def kge_loss(
+    kind: str,
+    pos_scores: jnp.ndarray,
+    neg_scores: jnp.ndarray,
+    margin: float = 1.0,
+) -> jnp.ndarray:
+    if kind == "logistic":
+        return logistic_loss(pos_scores, neg_scores)
+    if kind == "ranking":
+        return ranking_loss(pos_scores, neg_scores, margin)
+    if kind == "self_adv":
+        return self_adversarial_loss(pos_scores, neg_scores)
+    raise ValueError(kind)

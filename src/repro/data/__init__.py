@@ -1,0 +1,11 @@
+from repro.data.kg_synth import SyntheticKG, make_synthetic_kg, fb15k_like, wn18_like, freebase_like
+from repro.data.pipeline import Prefetcher
+
+__all__ = [
+    "SyntheticKG",
+    "make_synthetic_kg",
+    "fb15k_like",
+    "wn18_like",
+    "freebase_like",
+    "Prefetcher",
+]

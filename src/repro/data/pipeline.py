@@ -1,0 +1,43 @@
+"""Host data pipeline: background sampling, double-buffered.
+
+DGL-KE offloads sampling to DGL on CPU while GPUs compute (paper §3.3). The
+JAX analogue: a producer thread runs the numpy sampler; jax dispatch is async,
+so the device computes step t while the host builds batch t+1.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+
+class Prefetcher:
+    def __init__(self, sample_fn: Callable[[], object], depth: int = 2):
+        self.sample_fn = sample_fn
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+        self.thread.start()
+
+    def _run(self):
+        while not self._stop.is_set():
+            try:
+                self.q.put(self.sample_fn(), timeout=0.5)
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self.thread.join(timeout=2.0)

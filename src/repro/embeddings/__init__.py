@@ -1,0 +1,17 @@
+from repro.embeddings.table import EmbeddingTable, init_entity_table, init_relation_tables
+from repro.embeddings.kvstore import (
+    KVStoreSpec,
+    pull_local,
+    pull_remote,
+    push_remote_grads,
+)
+
+__all__ = [
+    "EmbeddingTable",
+    "init_entity_table",
+    "init_relation_tables",
+    "KVStoreSpec",
+    "pull_local",
+    "pull_remote",
+    "push_remote_grads",
+]

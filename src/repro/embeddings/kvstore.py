@@ -1,0 +1,116 @@
+"""KVStore semantics on a TPU mesh: capacity-bounded pull/push collectives.
+
+DGL-KE's distributed KVStore (paper §3.6) serves entity rows over RPC with
+shared-memory fast paths for local rows. On a TPU pod the equivalent is:
+
+  * **local pull**  — gather rows of the machine-local table block: zero ICI
+    traffic (the shared-memory fast path).
+  * **remote pull** — a fixed-capacity ``all_to_all`` over the machine axis:
+    each machine sends up to ``Rp = R / n_parts`` row-requests to every peer,
+    peers gather the rows from their local block, and a second ``all_to_all``
+    returns them. Static shapes keep XLA happy; METIS partitioning (§3.2)
+    is what makes a small R sufficient.
+  * **remote push** — the reverse route for gradients, after which each owner
+    applies the sparse Adagrad update locally.
+
+All functions below run *inside* ``jax.shard_map`` with:
+  machine axis  = 'data' (or ('pod','data') on the multi-pod mesh)
+  server axis   = 'model'  (dim-striping; never communicated here)
+
+Padding convention: id == -1 is an empty slot; its pulled row is zeroed and
+its pushed gradient is dropped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class KVStoreSpec:
+    machine_axis: AxisName  # 'data' or ('pod', 'data')
+    n_parts: int  # number of machines (= product of machine axis sizes)
+    remote_capacity: int  # R, total remote rows per machine per step
+    # wire format for remote rows/grads: bf16 halves ICI bytes (rows are
+    # re-cast to fp32 on arrival; Adagrad state stays fp32). Beyond-paper —
+    # see EXPERIMENTS.md §Perf hillclimb 3.
+    comm_dtype: str = "float32"
+
+    @property
+    def per_peer(self) -> int:
+        return max(1, self.remote_capacity // self.n_parts)
+
+    def wire(self, x: jnp.ndarray) -> jnp.ndarray:
+        return x.astype(jnp.dtype(self.comm_dtype))
+
+
+def _gather_rows(block: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Rows of local block for (possibly padded) ids; pad rows are zero."""
+    safe = jnp.maximum(ids, 0)
+    rows = block[safe]
+    return jnp.where((ids >= 0).reshape(ids.shape + (1,) * (rows.ndim - ids.ndim)), rows, 0.0)
+
+
+def pull_local(block: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Shared-memory fast path: ids index this machine's row block."""
+    return _gather_rows(block, ids)
+
+
+def pull_remote(
+    block: jnp.ndarray, req: jnp.ndarray, spec: KVStoreSpec
+) -> jnp.ndarray:
+    """Fetch rows from peers.
+
+    block: (rows_local, d_shard)  this machine's table block (this server's
+           dim slice).
+    req:   (n_parts, Rp) int32 — req[p] are row ids *local to machine p* that
+           this machine wants; -1 pads.
+    returns: (n_parts * Rp, d_shard) the fetched rows, zeros at pads.
+    """
+    ax = spec.machine_axis
+    # route requests to owners: after a2a, recv[p] = ids peer p asked us for
+    recv = jax.lax.all_to_all(req, ax, split_axis=0, concat_axis=0, tiled=True)
+    served = spec.wire(_gather_rows(block, recv))  # (n_parts, Rp, d_shard)
+    # route rows back to the requesters
+    rows = jax.lax.all_to_all(served, ax, split_axis=0, concat_axis=0, tiled=True)
+    return rows.reshape(-1, rows.shape[-1]).astype(block.dtype)
+
+
+def push_remote_grads(
+    grads: jnp.ndarray, req: jnp.ndarray, spec: KVStoreSpec
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return gradients for remotely-owned rows to their owners.
+
+    grads: (n_parts * Rp, d_shard) gradients for the rows fetched via
+           ``pull_remote`` (same order).
+    req:   the same request matrix passed to ``pull_remote``.
+    returns: (ids, grad_rows) on the *owner*: ids are machine-local row ids
+             (with -1 pads) of rows whose gradients arrived, grad_rows the
+             matching gradient rows. Apply with sparse Adagrad.
+    """
+    ax = spec.machine_axis
+    g = spec.wire(grads).reshape(req.shape[0], -1, grads.shape[-1])
+    recv_ids = jax.lax.all_to_all(req, ax, split_axis=0, concat_axis=0, tiled=True)
+    recv_grads = jax.lax.all_to_all(g, ax, split_axis=0, concat_axis=0, tiled=True)
+    return recv_ids.reshape(-1), recv_grads.reshape(-1, grads.shape[-1]).astype(grads.dtype)
+
+
+def pull(
+    block: jnp.ndarray,
+    local_ids: jnp.ndarray,
+    remote_req: jnp.ndarray,
+    spec: KVStoreSpec,
+) -> jnp.ndarray:
+    """Full pull: workspace = [local rows; remote rows].
+
+    Returns (L + n_parts * Rp, d_shard).
+    """
+    loc = pull_local(block, local_ids)
+    rem = pull_remote(block, remote_req, spec)
+    return jnp.concatenate([loc, rem], axis=0)

@@ -1,0 +1,82 @@
+"""Sharded embedding tables.
+
+The entity table is the "KVStore" payload of DGL-KE (§3.6), realized on a TPU
+mesh as a single array
+
+    entity:  (n_parts * rows_per_part, dim)   sharded  P(machine, 'model')
+
+— rows striped over the machine axis (≙ machines holding METIS partitions),
+dim striped over 'model' (≙ KVStore servers inside a machine; DGL-KE "strides
+embeddings across all KVStore servers").
+
+Relation tables follow the *relation partitioning* (§3.4): the host assigns
+each relation to a (part, slot) pair, so the table is (n_parts * slots, dim)
+with rows sharded over machines — every relation is owned by exactly one
+machine and updated with zero cross-machine traffic.
+
+Complex-valued models (ComplEx, RotatE) use an interleaved (re, im) pair
+layout along dim so that any even dim-slice contains whole complex numbers
+(required for dim-striping across 'model'). See core/scores.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import KGEConfig
+
+
+@dataclasses.dataclass
+class EmbeddingTable:
+    """Host-side description of a sharded table."""
+
+    name: str
+    n_rows: int  # padded global rows
+    dim: int
+    array: jnp.ndarray  # (n_rows, dim)
+
+    @property
+    def shape(self):
+        return (self.n_rows, self.dim)
+
+
+def emb_init_scale(cfg: KGEConfig) -> float:
+    # RotatE-codebase init (DGL-KE is built on it): (gamma + eps) / dim
+    return (cfg.gamma + 2.0) / cfg.dim
+
+
+def init_entity_table(cfg: KGEConfig, key: jax.Array, rows_per_part: int) -> jnp.ndarray:
+    n = cfg.n_parts * rows_per_part
+    s = emb_init_scale(cfg)
+    return jax.random.uniform(key, (n, cfg.dim), jnp.float32, -s, s)
+
+
+def init_relation_tables(
+    cfg: KGEConfig, key: jax.Array, slots_per_part: int
+) -> Dict[str, jnp.ndarray]:
+    """Relation embedding (+ per-relation projection for TransR/RESCAL)."""
+    n = cfg.n_parts * slots_per_part
+    s = emb_init_scale(cfg)
+    k1, k2 = jax.random.split(key)
+    out = {"r_emb": jax.random.uniform(k1, (n, cfg.rel_dim), jnp.float32, -s, s)}
+    if cfg.model in ("transr", "rescal"):
+        # projection matrix per relation, flattened (d * rel_dim) per row
+        p = jax.random.uniform(
+            k2, (n, cfg.dim * cfg.rel_dim), jnp.float32, -s, s
+        )
+        if cfg.model == "transr":
+            # bias towards identity so early training is stable
+            eye = np.eye(cfg.dim, cfg.rel_dim, dtype=np.float32).reshape(-1)
+            p = p * 0.1 + jnp.asarray(eye)
+        out["r_proj"] = p
+    return out
+
+
+def rows_per_part(n_entities: int, n_parts: int, multiple: int = 8) -> int:
+    r = (n_entities + n_parts - 1) // n_parts
+    return ((r + multiple - 1) // multiple) * multiple

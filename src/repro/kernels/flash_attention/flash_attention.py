@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: blocked online-softmax attention (FlashAttention-style).
+
+Forward-only — this is the *serving/prefill* hot path of the architecture
+zoo; training uses the jnp reference (XLA fuses the bf16 path acceptably and
+the paper under reproduction has no attention-training contribution).
+
+Grid: (num_q_blocks, num_kv_blocks), kv innermost. TPU executes the grid
+sequentially, so the running max / denominator / accumulator live in VMEM
+scratch across kv steps and are finalized on the last one. Causal and
+sliding-window masks are applied with position iotas; kv blocks that are
+fully outside the mask are skipped under ``pl.when`` (cheap on TPU, since
+sequential grid => no wasted parallel slot).
+
+Block sizes default to (bq, bkv) = (256, 512) with dh up to 256 — the
+working set bq*dh + 2*bkv*dh + bq*bkv floats stays ≪ v5e VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, macc, lacc, oacc,
+    *, scale: float, causal: bool, window: int, q_offset: int,
+    bq: int, bkv: int, n_kv: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        macc[...] = jnp.full_like(macc, NEG_INF)
+        lacc[...] = jnp.zeros_like(lacc)
+        oacc[...] = jnp.zeros_like(oacc)
+
+    # block-level relevance (static per (i, j) at trace time? no — i,j traced;
+    # compute dynamically)
+    q_lo = i * bq + q_offset
+    q_hi = q_lo + bq - 1
+    k_lo = j * bkv
+    k_hi = k_lo + bkv - 1
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant &= k_lo <= q_hi
+    if window > 0:
+        relevant &= k_hi > q_lo - window
+
+    @pl.when(relevant)
+    def _block():
+        q = q_ref[...].astype(jnp.float32)  # (bq, dh)
+        k = k_ref[...].astype(jnp.float32)  # (bkv, dh)
+        v = v_ref[...].astype(jnp.float32)  # (bkv, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bkv)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = macc[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = lacc[:, 0] * alpha + jnp.sum(p, axis=1)
+        lacc[...] = jnp.broadcast_to(l_new[:, None], lacc.shape)
+        oacc[...] = oacc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        macc[...] = jnp.broadcast_to(m_new[:, None], macc.shape)
+
+    @pl.when(j == n_kv - 1)
+    def _fini():
+        denom = jnp.maximum(lacc[:, 0], 1e-30)
+        o_ref[...] = (oacc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (T, dh)
+    k: jnp.ndarray,  # (S, dh)
+    v: jnp.ndarray,  # (S, dh)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    bq: int = 256,
+    bkv: int = 512,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    T, dh = q.shape
+    S = k.shape[0]
+    bq = min(bq, T)
+    bkv = min(bkv, S)
+    assert T % bq == 0 and S % bkv == 0, (T, bq, S, bkv)
+    scale = scale if scale is not None else dh**-0.5
+    grid = (T // bq, S // bkv)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bkv=bkv, n_kv=grid[1],
+    )
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, dh), lambda i, j: (i, 0)),
+            pl.BlockSpec((bkv, dh), lambda i, j: (j, 0)),
+            pl.BlockSpec((bkv, dh), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, dh), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),  # running max (lane-bcast)
+            pltpu.VMEM((bq, 128), jnp.float32),  # running denom
+            pltpu.VMEM((bq, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for blocked attention: causal + sliding-window, GQA."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (T, dh)
+    k: jnp.ndarray,  # (S, dh)
+    v: jnp.ndarray,  # (S, dh)
+    causal: bool = True,
+    window: int = 0,  # 0 = unlimited
+    q_offset: int = 0,  # absolute position of q[0] is q_offset (for caches)
+    scale: float | None = None,
+) -> jnp.ndarray:
+    T, dh = q.shape
+    S = k.shape[0]
+    scale = scale if scale is not None else dh**-0.5
+    s = (q @ k.T) * scale  # (T, S)
+    qpos = jnp.arange(T)[:, None] + q_offset
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v
+
+
+def mha_ref(q, k, v, causal=True, window=0, q_offset=0):
+    """(B, H, T, dh) x (B, Hkv, S, dh) — GQA by head-group broadcast."""
+    B, H, T, dh = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qq = q.reshape(B, Hkv, g, T, dh)
+    import jax
+
+    f = jax.vmap(  # over B
+        jax.vmap(  # over kv heads
+            jax.vmap(  # over group
+                lambda q1, k1, v1: attention_ref(
+                    q1, k1, v1, causal=causal, window=window, q_offset=q_offset
+                ),
+                in_axes=(0, None, None),
+            ),
+            in_axes=(0, 0, 0),
+        ),
+        in_axes=(0, 0, 0),
+    )
+    return f(qq, k, v).reshape(B, H, T, dh)

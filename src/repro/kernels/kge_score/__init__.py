@@ -1,0 +1,3 @@
+from repro.kernels.kge_score.ops import pairwise_scores_kernel, kernel_pairwise_fn
+
+__all__ = ["pairwise_scores_kernel", "kernel_pairwise_fn"]

@@ -1,0 +1,93 @@
+"""jit'd wrapper for the kge_score kernel: padding, custom VJP, CPU fallback.
+
+``kernel_pairwise_fn`` is a drop-in for core/scores.pairwise_scores — pass it
+as ``pairwise_fn`` to negative_score / the train steps to route the T1 hot
+loop through the Pallas kernel.
+
+Backward:
+  dot  : d_o = g @ negs ; d_n = g.T @ o                 (plain GEMMs — XLA)
+  l2sq : d_o = 2 (o · rowsum(g) − g @ negs) ; symmetric (plain GEMMs)
+  l1   : Pallas kernels (kge_score.l1_bwd_pallas) — the jnp form would
+         materialize (B, K, D) in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kge_score.kge_score import l1_bwd_pallas, pairwise_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _tiles(B: int, K: int, D: int, mode: str):
+    # MXU-aligned for GEMM modes; smaller D tiles for the VPU L1 path
+    bm = 128 if B >= 128 else max(8, 1 << (B - 1).bit_length())
+    bn = 128 if K >= 128 else max(8, 1 << (K - 1).bit_length())
+    bk = (128 if mode == "l1" else 512)
+    bk = min(bk, 1 << max(3, (D - 1).bit_length()))
+    return bm, bn, bk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def pairwise_scores_kernel(mode: str, o: jnp.ndarray, negs: jnp.ndarray):
+    """(B, D) x (K, D) -> (B, K), matching core/scores.pairwise_scores."""
+    return _fwd_impl(mode, o, negs)
+
+
+def _fwd_impl(mode, o, negs):
+    B, D = o.shape
+    K = negs.shape[0]
+    bm, bn, bk = _tiles(B, K, D, mode)
+    op = _pad_to(o.astype(jnp.float32), bm, bk)
+    np_ = _pad_to(negs.astype(jnp.float32), bn, bk)
+    out = pairwise_pallas(op, np_, mode, bm=bm, bn=bn, bk=bk, interpret=_interpret())
+    return out[:B, :K]
+
+
+def _fwd(mode, o, negs):
+    return _fwd_impl(mode, o, negs), (o, negs)
+
+
+def _bwd(mode, res, g):
+    o, negs = res
+    g = g.astype(jnp.float32)
+    if mode == "dot":
+        return g @ negs, g.T @ o
+    if mode == "l2sq":
+        d_o = 2.0 * (o * jnp.sum(g, axis=1, keepdims=True) - g @ negs)
+        d_n = 2.0 * (negs * jnp.sum(g, axis=0)[:, None] - g.T @ o)
+        return d_o, d_n
+    if mode == "l1":
+        B, D = o.shape
+        K = negs.shape[0]
+        bm, bn, bk = _tiles(B, K, D, mode)
+        op = _pad_to(o.astype(jnp.float32), bm, bk)
+        np_ = _pad_to(negs.astype(jnp.float32), bn, bk)
+        gp = _pad_to(g, bm, bn)
+        d_o, d_n = l1_bwd_pallas(
+            op, np_, gp, bm=bm, bn=bn, bk=bk, interpret=_interpret()
+        )
+        return d_o[:B, :D], d_n[:K, :D]
+    raise ValueError(mode)
+
+
+pairwise_scores_kernel.defvjp(_fwd, _bwd)
+
+
+def kernel_pairwise_fn(mode: str, o: jnp.ndarray, negs: jnp.ndarray):
+    """Drop-in ``pairwise_fn`` for core/scores.negative_score."""
+    return pairwise_scores_kernel(mode, o, negs)

@@ -1,0 +1,31 @@
+"""jit'd wrapper for the SSD scan kernel: layout prep + CPU fallback."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(
+    x: jnp.ndarray,  # (T, H, P) — time-major, like the model uses
+    dt: jnp.ndarray,  # (T, H)
+    A: jnp.ndarray,  # (H,)
+    B: jnp.ndarray,  # (T, N)
+    C: jnp.ndarray,  # (T, N)
+    chunk: int = 128,
+) -> jnp.ndarray:
+    """Returns y (T, H, P). Matches ref.ssd_ref / ref.ssd_chunked_jnp."""
+    xh = jnp.transpose(x, (1, 0, 2))  # (H, T, P)
+    dth = jnp.transpose(dt, (1, 0))  # (H, T)
+    gah = A[:, None] * dth
+    y = ssd_scan_pallas(xh, dth, gah, B, C, chunk=chunk, interpret=_interpret())
+    return jnp.transpose(y, (1, 0, 2))

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the Mamba2 SSD scan.
+
+Recurrence (per head h, ngroups=1 so B/C are shared across heads):
+
+    a_t     = exp(A_h * dt_{t,h})                    (A_h < 0)
+    S_t     = a_t * S_{t-1} + dt_{t,h} * x_t ⊗ B_t    S: (P, N)
+    y_t     = S_t @ C_t                               (P,)
+
+``ssd_ref`` is the step-by-step lax.scan oracle; ``ssd_chunked_jnp`` is the
+matmul-rich chunked form (state-space duality) used by the model's training
+path — both must agree, and the Pallas kernel must match them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jnp.ndarray,  # (T, H, P)
+    dt: jnp.ndarray,  # (T, H)
+    A: jnp.ndarray,  # (H,)
+    B: jnp.ndarray,  # (T, N)
+    C: jnp.ndarray,  # (T, N)
+    init_state: jnp.ndarray | None = None,  # (H, P, N)
+):
+    T, H, P = x.shape
+    N = B.shape[1]
+    s0 = jnp.zeros((H, P, N)) if init_state is None else init_state
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp  # (H,P), (H,), (N,), (N,)
+        a = jnp.exp(A * dtt)  # (H,)
+        s = a[:, None, None] * s + (dtt[:, None] * xt)[..., None] * bt[None, None, :]
+        y = jnp.einsum("hpn,n->hp", s, ct)
+        return s, y
+
+    s_fin, ys = jax.lax.scan(step, s0, (x, dt, B, C))
+    return ys, s_fin  # (T, H, P), (H, P, N)
+
+
+def ssd_chunked_jnp(
+    x: jnp.ndarray,  # (T, H, P)
+    dt: jnp.ndarray,  # (T, H)
+    A: jnp.ndarray,  # (H,)
+    B: jnp.ndarray,  # (T, N)
+    C: jnp.ndarray,  # (T, N)
+    chunk: int = 64,
+    init_state: jnp.ndarray | None = None,
+):
+    """Chunked SSD: intra-chunk 'attention' term + inter-chunk state pass."""
+    T, H, P = x.shape
+    N = B.shape[1]
+    assert T % chunk == 0
+    nc = T // chunk
+    xr = x.reshape(nc, chunk, H, P)
+    dtr = dt.reshape(nc, chunk, H)
+    Br = B.reshape(nc, chunk, N)
+    Cr = C.reshape(nc, chunk, N)
+    s0 = jnp.zeros((H, P, N)) if init_state is None else init_state
+
+    def chunk_step(state, inp):
+        xc, dtc, bc, cc = inp  # (c,H,P),(c,H),(c,N),(c,N)
+        ga = A[None, :] * dtc  # (c, H) log-decay
+        cs = jnp.cumsum(ga, axis=0)  # inclusive
+        # intra-chunk: y_t += sum_{s<=t} exp(cs_t - cs_s) dt_s (B_s.C_t) x_s
+        c = cc.shape[0]
+        tri = jnp.tril(jnp.ones((c, c), dtype=bool))  # t >= s
+        L = jnp.where(tri[:, :, None], jnp.exp(cs[:, None, :] - cs[None, :, :]), 0.0)
+        G = jnp.einsum("tn,sn->ts", cc, bc)  # (c, c)
+        W = G[:, :, None] * L  # (c, c, H)
+        y = jnp.einsum("tsh,sh,shp->thp", W, dtc, xc)
+        # inter-chunk: y_t += exp(cs_t) C_t . state
+        y += jnp.einsum("th,hpn,tn->thp", jnp.exp(cs), state, cc)
+        # state update
+        tot = cs[-1]  # (H,)
+        w = jnp.exp(tot[None, :] - cs)  # (c, H)
+        news = jnp.exp(tot)[:, None, None] * state + jnp.einsum(
+            "sh,shp,sn->hpn", w * dtc, xc, bc
+        )
+        return news, y
+
+    s_fin, ys = jax.lax.scan(chunk_step, s0, (xr, dtr, Br, Cr))
+    return ys.reshape(T, H, P), s_fin

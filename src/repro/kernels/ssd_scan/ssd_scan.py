@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+Grid: (H, T/chunk) with the chunk dim innermost — TPU grids run sequentially,
+so the (P, N) recurrent state lives in VMEM scratch across chunk steps (reset
+at chunk 0 of each head). Within a chunk everything is GEMM-shaped for the
+MXU: the (c, c) decay-masked B·C Gram matrix, the (c, P) intra-chunk product,
+and the (P, N) state outer-product update.
+
+Inputs are pre-arranged by ops.py as head-major: x (H, T, P), ga = A*dt and
+dt (H, T). B/C (T, N) are shared across heads (ngroups = 1, the Mamba2
+default).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, ga_ref, b_ref, c_ref, y_ref, state, *, chunk: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0].astype(jnp.float32)  # (c, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (1, c) -> (c,)
+    ga = ga_ref[0].astype(jnp.float32)
+    Bm = b_ref[...].astype(jnp.float32)  # (c, N)
+    Cm = c_ref[...].astype(jnp.float32)  # (c, N)
+
+    cs = jnp.cumsum(ga)  # (c,) inclusive log-decay
+    # intra-chunk decay-masked Gram: W[t, s] = exp(cs_t - cs_s) * C_t.B_s, s<=t
+    L = jnp.exp(cs[:, None] - cs[None, :])
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    G = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    W = jnp.where(tri, G * L, 0.0)  # (c, c)
+    y = jax.lax.dot_general(
+        W, dt[:, None] * x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (c, P)
+    # inter-chunk: y_t += exp(cs_t) * C_t @ state^T   (state: (P, N))
+    y += jnp.exp(cs)[:, None] * jax.lax.dot_general(
+        Cm, state[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state' = exp(total) * state + sum_s exp(total - cs_s) dt_s x_s ⊗ B_s
+    tot = cs[chunk - 1]
+    w = jnp.exp(tot - cs) * dt  # (c,)
+    state[...] = jnp.exp(tot) * state[...] + jax.lax.dot_general(
+        w[:, None] * x, Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (P, N)
+
+
+def ssd_scan_pallas(
+    x: jnp.ndarray,  # (H, T, P) head-major
+    dt: jnp.ndarray,  # (H, T)
+    ga: jnp.ndarray,  # (H, T)  = A[:, None] * dt
+    B: jnp.ndarray,  # (T, N)
+    C: jnp.ndarray,  # (T, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    H, T, P = x.shape
+    N = B.shape[1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    grid = (H, T // chunk)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kern = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk), lambda h, c: (h, c)),
+            pl.BlockSpec((1, chunk), lambda h, c: (h, c)),
+            pl.BlockSpec((chunk, N), lambda h, c: (c, 0)),
+            pl.BlockSpec((chunk, N), lambda h, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda h, c: (h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, T, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, ga, B, C)

@@ -1,0 +1,301 @@
+"""While-loop-aware cost analysis of compiled HLO text.
+
+``compiled.cost_analysis()`` reports each while-loop *body once*, so scanned
+layers / gradient-accumulation loops are undercounted by their trip counts
+(verified empirically: a 6-step lax.scan reports 1/6 the FLOPs of the
+unrolled form). This module re-derives the roofline inputs directly from
+``compiled.as_text()``:
+
+  * **flops**     — 2·M·N·K for every dot (standalone on CPU/TPU HLO), plus
+                    convolutions, multiplied through the while-loop call tree;
+  * **hbm_bytes** — Σ (operand + output bytes) over *top-level* instructions
+                    (fusions count their boundary tensors only — a reasonable
+                    HBM-traffic model: fusion internals stay in registers /
+                    VMEM), loop-aware;
+  * **coll_bytes**— per-device ICI bytes for each collective with ring cost
+                    factors: all-reduce 2(n−1)/n, all-gather (n−1)/n of the
+                    gathered output, reduce-scatter (n−1)·out, all-to-all
+                    (n−1)/n, collective-permute 1×.
+
+All numbers are PER DEVICE (SPMD HLO shapes are per-shard).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+
+def _shape_elems(tok: str) -> List[Tuple[str, int, int]]:
+    """All (dtype, numel, bytes) found in a shape token (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(tok):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((dt, n, n * _DTYPE_BYTES[dt]))
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    out_bytes: int
+    out_elems: int
+    shape_tok: str
+    operands: List[str]
+    attrs: str
+    raw: str
+
+
+@dataclasses.dataclass
+class CollectiveStat:
+    kind: str
+    count: float = 0.0
+    bytes: float = 0.0  # per-device ICI bytes (ring-model)
+    raw_bytes: float = 0.0  # shard bytes without ring factor
+
+
+# shape tokens may be tuples containing /*index=N*/ comments; the op name is
+# the first bare word followed immediately by '(' after the '='.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, List[Instr]], str]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    entry = ""
+    for line in text.splitlines():
+        if line.rstrip().endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_tok, op, rest = m.groups()
+        elems = _shape_elems(shape_tok)
+        ob = sum(b for _, _, b in elems)
+        oe = sum(n for _, n, _ in elems)
+        # operand names: %foo.1 tokens in the argument list (before attrs)
+        args = rest.split("),", 1)[0]
+        operands = re.findall(r"%([\w.\-]+)", args)
+        comps[cur].append(
+            Instr(name=name, op=op, out_bytes=ob, out_elems=oe,
+                  shape_tok=shape_tok, operands=operands, attrs=rest, raw=line)
+        )
+    return comps, entry
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done", "while", "call", "conditional",
+}
+_ASYNC_DONE = ("-done",)
+
+
+def _dot_flops(instr: Instr, name2bytes: Dict[str, Tuple[int, int]]) -> float:
+    """2 * out_elems * K; K from contracting dims of the lhs."""
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+    if not m or not instr.operands:
+        return 2.0 * instr.out_elems
+    lhs = instr.operands[0]
+    shp = name2bytes.get(lhs)
+    if shp is None:
+        return 2.0 * instr.out_elems
+    dims = shp[2]
+    k = 1
+    for d in m.group(1).split(","):
+        if d != "" and int(d) < len(dims):
+            k *= dims[int(d)]
+    # batch dims shrink nothing: out_elems already excludes contraction
+    return 2.0 * instr.out_elems * k
+
+
+def _participants(attrs: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]*)\}", attrs)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return total_devices
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: Dict[str, CollectiveStat] = dataclasses.field(default_factory=dict)
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(c.bytes for c in self.collectives.values())
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, c in other.collectives.items():
+            s = self.collectives.setdefault(k, CollectiveStat(kind=k))
+            s.count += c.count * mult
+            s.bytes += c.bytes * mult
+            s.raw_bytes += c.raw_bytes * mult
+
+
+def _trip_count(while_instr: Instr, cond_instrs: List[Instr]) -> float:
+    """Exact trip count from backend_config known_trip_count when present,
+    else max integer constant in the loop condition computation."""
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', while_instr.attrs)
+    if m:
+        return float(m.group(1))
+    best = 1
+    for ins in cond_instrs:
+        if ins.op == "constant":
+            mm = re.search(r"constant\((\d+)\)", ins.raw)
+            if mm:
+                best = max(best, int(mm.group(1)))
+    return float(best)
+
+
+def analyze_hlo(text: str, total_devices: int = 1) -> HloCost:
+    comps, entry = parse_computations(text)
+    # global name -> (out_bytes, out_elems, dims of first array in shape)
+    name2shape: Dict[str, Tuple[int, int, List[int]]] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            m = _SHAPE_RE.search(ins.shape_tok)
+            dims = []
+            if m and m.group(2):
+                dims = [int(d) for d in m.group(2).split(",")]
+            name2shape[ins.name] = (ins.out_bytes, ins.out_elems, dims)
+
+    # map while instruction -> (cond, body)
+    memo: Dict[str, HloCost] = {}
+
+    # in-place updates (scatter / dynamic-update-slice) write only the
+    # updated region on TPU (buffer donation/aliasing) — count update bytes,
+    # not the full buffer. Also applies to fusions whose root is a DUS.
+    def _inplace_bytes(ins: Instr, comp_instrs: List[Instr]) -> Optional[float]:
+        target = None
+        if ins.op == "dynamic-update-slice" and len(ins.operands) >= 2:
+            target = ins.operands[1]
+        elif ins.op == "scatter" and len(ins.operands) >= 3:
+            target = ins.operands[2]
+        elif ins.op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+            callee = comps.get(m.group(1)) if m else None
+            if callee:
+                root = callee[-1]
+                if root.op == "dynamic-update-slice" and len(root.operands) >= 2:
+                    target = root.operands[1]
+                elif root.op == "scatter" and len(root.operands) >= 3:
+                    target = root.operands[2]
+        if target is None:
+            return None
+        tb = name2shape.get(target)
+        if tb is None:
+            return None
+        # read update + read/write the touched region
+        return 3.0 * tb[0]
+
+    def cost_of(comp: str) -> HloCost:
+        if comp in memo:
+            return memo[comp]
+        total = HloCost()
+        for ins in comps.get(comp, []):
+            op = ins.op
+            if op == "while":
+                m = re.search(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)", ins.attrs)
+                if m:
+                    trip = _trip_count(ins, comps.get(m.group(1), []))
+                    total.add(cost_of(m.group(2)), trip)
+                continue
+            if op in ("call", "async-start"):
+                m = re.search(r"(?:to_apply|called_computation)=%?([\w.\-]+)", ins.attrs)
+                if m and m.group(1) in comps:
+                    total.add(cost_of(m.group(1)))
+                continue
+            if op == "conditional":
+                for m in re.finditer(r"(?:branch_computations=\{|true_computation=|false_computation=)%?([\w.\-]+)", ins.attrs):
+                    if m.group(1) in comps:
+                        total.add(cost_of(m.group(1)))
+                continue
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                n = _participants(ins.attrs, total_devices)
+                opb = sum(name2shape.get(o, (0, 0, []))[0] for o in ins.operands
+                          if o in name2shape)
+                shard = max(ins.out_bytes, opb) if base != "all-gather" else ins.out_bytes
+                if base == "all-reduce":
+                    ici = 2.0 * (n - 1) / n * shard
+                elif base == "all-gather":
+                    ici = (n - 1) / n * ins.out_bytes
+                elif base == "reduce-scatter":
+                    ici = (n - 1) * ins.out_bytes
+                elif base in ("all-to-all", "ragged-all-to-all"):
+                    ici = (n - 1) / n * shard
+                else:  # collective-permute
+                    ici = float(shard)
+                s = total.collectives.setdefault(base, CollectiveStat(kind=base))
+                s.count += 1
+                s.bytes += ici
+                s.raw_bytes += shard
+                total.hbm_bytes += shard * 2  # read + write locally
+                continue
+            if op.endswith(_ASYNC_DONE) or op in _SKIP_BYTES_OPS:
+                continue
+            if op in ("dot", "convolution"):
+                total.flops += _dot_flops(ins, name2shape)
+                total.hbm_bytes += 2 * ins.out_bytes
+                continue
+            ipb = _inplace_bytes(ins, comps.get(comp, []))
+            if ipb is not None:
+                total.hbm_bytes += ipb
+                continue
+            # generic instruction (incl. fusion / custom-call): write + one
+            # later read of the output. Operand reads are attributed to the
+            # producing instruction, so stacked scan weights sliced inside a
+            # fusion are not over-counted.
+            total.hbm_bytes += 2 * ins.out_bytes
+            if op in ("add", "multiply", "subtract", "divide", "exponential",
+                      "tanh", "rsqrt", "maximum", "minimum", "select",
+                      "compare", "negate", "power", "log", "sine", "cosine"):
+                total.flops += ins.out_elems
+        memo[comp] = total
+        return total
+
+    return cost_of(entry)

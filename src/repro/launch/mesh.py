@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Single pod: (16, 16) = ('data', 'model')  — 256 chips (TPU v5e pod).
+Multi-pod:  (2, 16, 16) = ('pod', 'data', 'model') — 512 chips.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (smoke tests run with 1 CPU device; only launch/dryrun.py
+sets xla_force_host_platform_device_count).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/examples (e.g. (4, 2) on 8 CPU devices)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

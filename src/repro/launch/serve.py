@@ -1,0 +1,74 @@
+"""LM serving driver: prefill + batched decode for any --arch (reduced or full).
+
+On CPU this runs the REDUCED config end-to-end (full configs are exercised by
+launch/dryrun.py without allocation):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--full", action="store_true", help="full (not reduced) config")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.models.transformer import build_model
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+    B, T = args.batch, args.prompt_len
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+
+    total = T + args.gen
+    caches = jax.tree.map(
+        lambda d: jnp.zeros(d.shape, d.dtype),
+        model.cache_defs(B, total),
+        is_leaf=lambda x: hasattr(x, "materialize"))
+
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    # prefill via decode loop (prefill_step exists for the batch path; the
+    # serving loop here feeds the prompt token by token to fill the caches)
+    t0 = time.time()
+    logits = None
+    for i in range(T):
+        logits, caches = decode(params, caches, tokens[:, i : i + 1],
+                                jnp.asarray(i, jnp.int32))
+    out = []
+    for i in range(args.gen):
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(np.asarray(nxt))
+        logits, caches = decode(params, caches, nxt,
+                                jnp.asarray(T + i, jnp.int32))
+    dt = time.time() - t0
+    gen = np.concatenate(out, axis=1)
+    print(f"arch={cfg.name} reduced={not args.full} batch={B}")
+    print(f"generated tokens:\n{gen}")
+    steps = T + args.gen
+    print(f"{steps} decode steps in {dt:.2f}s -> {steps*B/dt:.1f} tok/s")
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""KGE training driver (the paper's workload).
+
+Single-machine (many-core) mode:
+    PYTHONPATH=src python -m repro.launch.train --dataset fb15k --model transe_l2 \
+        --steps 2000 --scale 0.2 --eval
+
+Distributed mode (SPMD over a CPU mesh here; the same program runs on the
+production mesh):
+    PYTHONPATH=src python -m repro.launch.train --dataset fb15k --distributed \
+        --mesh 4x2 --steps 500 --partitioner metis
+
+All of the paper's techniques are switchable:
+    --neg-mode joint|naive        (T1)
+    --neg-deg-ratio 0.5           (T2)
+    --partitioner metis|random    (T3)
+    --no-overlap                  (T5 off)
+    --use-kernel                  (Pallas kge_score)
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="fb15k", choices=["fb15k", "wn18", "freebase"])
+    ap.add_argument("--model", default="transe_l2")
+    ap.add_argument("--dim", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--batch-size", type=int, default=0)
+    ap.add_argument("--neg", type=int, default=0)
+    ap.add_argument("--neg-mode", default="joint", choices=["joint", "naive"])
+    ap.add_argument("--neg-deg-ratio", type=float, default=-1.0)
+    ap.add_argument("--lr", type=float, default=0.0)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="synthetic graph scale vs the paper's dataset")
+    ap.add_argument("--eval", action="store_true")
+    ap.add_argument("--eval-n", type=int, default=2000)
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--mesh", default="4x2", help="data x model, e.g. 4x2")
+    ap.add_argument("--partitioner", default="metis", choices=["metis", "random"])
+    ap.add_argument("--no-overlap", action="store_true")
+    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--remote-capacity", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--save-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import KGE_DATASETS
+    from repro.data.kg_synth import fb15k_like, freebase_like, wn18_like
+
+    cfg = KGE_DATASETS[args.dataset]
+    gen = {"fb15k": fb15k_like, "wn18": wn18_like, "freebase": freebase_like}[
+        args.dataset]
+    kg = gen(scale=args.scale if args.dataset != "freebase" else 0.001 * args.scale,
+             seed=args.seed)
+    upd = dict(
+        model=args.model,
+        n_entities=kg.n_entities,
+        n_relations=kg.n_relations,
+    )
+    if args.dim:
+        upd["dim"] = args.dim
+    if args.batch_size:
+        upd["batch_size"] = args.batch_size
+    if args.neg:
+        upd["neg_sample_size"] = args.neg
+    if args.lr:
+        upd["lr"] = args.lr
+    if args.neg_deg_ratio >= 0:
+        upd["neg_deg_ratio"] = args.neg_deg_ratio
+    if args.no_overlap:
+        upd["overlap_update"] = False
+    if args.remote_capacity:
+        upd["remote_capacity"] = args.remote_capacity
+    if args.model == "transr":
+        upd["rel_dim"] = min(64, cfg.dim)
+    upd["partitioner"] = args.partitioner
+    cfg = dataclasses.replace(cfg, **upd)
+    print(f"graph: {kg.n_entities} entities, {kg.n_relations} relations, "
+          f"{kg.triplets.shape[0]} triplets")
+
+    pairwise_fn = None
+    if args.use_kernel:
+        from repro.kernels.kge_score.ops import kernel_pairwise_fn
+
+        pairwise_fn = kernel_pairwise_fn
+
+    if args.distributed:
+        _train_distributed(args, cfg, kg, pairwise_fn)
+    else:
+        _train_single(args, cfg, kg, pairwise_fn)
+
+
+def _train_single(args, cfg, kg, pairwise_fn):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import eval as E
+    from repro.core.kge_model import (
+        batch_to_device, init_state, make_train_step, naive_train_step,
+    )
+    from repro.core.sampling import JointSampler, NaiveSampler
+    from repro.data.pipeline import Prefetcher
+
+    rng = np.random.default_rng(args.seed)
+    state = init_state(cfg, jax.random.key(args.seed))
+    if args.neg_mode == "joint":
+        sampler = JointSampler(kg.train, cfg.n_entities, cfg, rng)
+        step = make_train_step(cfg, pairwise_fn)
+        to_dev = batch_to_device
+    else:
+        sampler = NaiveSampler(kg.train, cfg.n_entities, cfg, rng)
+        import functools
+
+        step = jax.jit(functools.partial(naive_train_step, cfg))
+        to_dev = lambda b: {
+            "h": jnp.asarray(b.h, jnp.int32), "r": jnp.asarray(b.r, jnp.int32),
+            "t": jnp.asarray(b.t, jnp.int32), "neg": jnp.asarray(b.neg, jnp.int32)}
+
+    import jax as _jax
+
+    from repro.common.checkpoint import (
+        latest_step, restore_checkpoint, save_checkpoint,
+    )
+
+    start = 0
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        abstract = _jax.tree.map(
+            lambda x: _jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        state = restore_checkpoint(args.ckpt_dir, abstract)
+        start = int(state.step)
+        print(f"resumed from step {start}")
+
+    pf = Prefetcher(lambda: to_dev(sampler.sample()))
+    t0 = time.time()
+    for i, batch in zip(range(start, args.steps), pf):
+        state, m = step(state, batch)
+        if (i + 1) % args.log_every == 0:
+            dt = time.time() - t0
+            print(f"step {i+1:6d} loss {float(m['loss']):8.4f} "
+                  f"({(i+1-start)/dt:6.1f} steps/s, "
+                  f"{(i+1-start)*cfg.batch_size/dt:9.0f} triplets/s)")
+        if args.ckpt_dir and args.save_every and (i + 1) % args.save_every == 0:
+            save_checkpoint(args.ckpt_dir, i + 1, state)
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, state)
+    pf.close()
+    if args.eval:
+        test = kg.test[: args.eval_n]
+        if cfg.n_entities <= 60_000:
+            fm = E.build_filter_map(kg.triplets)
+            ranks = E.ranks_against_all(cfg, state, test, filter_map=fm)
+        else:
+            ranks = E.ranks_protocol2(cfg, state, test, kg.degrees().astype(np.float64))
+        print("eval:", E.metrics_from_ranks(ranks))
+
+
+def _train_distributed(args, cfg, kg, pairwise_fn):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.distributed import build_dist_train_step, init_dist_state, make_program
+    from repro.core.graph_part import cut_fraction, partition
+    from repro.core.rel_part import relation_partition
+    from repro.core.sampling import DistSampler
+    from repro.data.pipeline import Prefetcher
+    from repro.launch.mesh import make_mesh
+
+    dshape = tuple(int(x) for x in args.mesh.split("x"))
+    names = ("data", "model") if len(dshape) == 2 else ("pod", "data", "model")
+    mesh = make_mesh(dshape, names)
+    n_parts = int(np.prod(dshape[:-1]))
+    cfg = dataclasses.replace(cfg, n_parts=n_parts)
+
+    book = partition(kg.train, cfg.n_entities, n_parts,
+                     method=args.partitioner, seed=args.seed)
+    print(f"partitioner={args.partitioner} cut={cut_fraction(kg.train, book.part_of):.3f}")
+    rp = relation_partition(kg.rel_counts(), n_parts, seed=args.seed)
+    prog = make_program(cfg, book.rows_per_part, rp.slots_per_part, rp.n_shared)
+    sampler = DistSampler(kg.train, book, rp, cfg, np.random.default_rng(args.seed))
+    step, state_sh, batch_sh = build_dist_train_step(prog, mesh, pairwise_fn)
+
+    with jax.set_mesh(mesh):
+        state = jax.device_put(init_dist_state(prog, jax.random.key(args.seed)),
+                               state_sh)
+
+        def make_batch():
+            db = sampler.sample()
+            return {k: jnp.asarray(getattr(db, k)) for k in batch_sh}, db.stats
+
+        pf = Prefetcher(make_batch)
+        t0 = time.time()
+        drops = 0
+        for i, (batch, stats) in zip(range(args.steps), pf):
+            batch = {k: jax.device_put(v, batch_sh[k]) for k, v in batch.items()}
+            state, m = step(state, batch)
+            drops += stats["dropped"]
+            if (i + 1) % args.log_every == 0:
+                dt = time.time() - t0
+                print(f"step {i+1:6d} loss {float(m['loss']):8.4f} "
+                      f"({(i+1)/dt:6.1f} steps/s, drop {drops/(i+1)/cfg.batch_size/n_parts:.2%})")
+        pf.close()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

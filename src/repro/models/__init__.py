@@ -1,0 +1,13 @@
+"""Architecture zoo: the 10 assigned architectures as composable JAX modules.
+
+layers      — ParamDef infra, norms, rope, embeddings, sharded cross-entropy
+attention   — GQA / SWA / MLA, train + decode-with-cache paths
+moe         — expert-parallel MoE via shard_map (capacity, top-k router)
+ssm         — Mamba2 (SSD) mixer, chunked train path + recurrent decode
+transformer — block assembly, scan-over-layers, LM / enc-dec / stub frontends
+steps       — train_step / prefill_step / serve_step builders (pjit)
+"""
+
+from repro.models.transformer import build_model
+
+__all__ = ["build_model"]

@@ -1,0 +1,339 @@
+"""Attention mixers: GQA (full / sliding-window, optional QKV bias) and MLA.
+
+Paths:
+  * ``attention_train`` — full-sequence, chunked over queries (lax.scan +
+    remat) so the (T, S) score matrix never fully materializes; used by
+    train_step and prefill_step. Optionally routed through the Pallas
+    flash_attention kernel (wrapped in shard_map) for serving.
+  * ``attention_decode`` — one token against a KV cache. SWA uses a ring
+    cache of size ``window`` (this is what makes long_500k decode feasible
+    for SWA architectures). MLA decode uses the *absorbed* form: the cache
+    holds only the latent c_kv + shared k_rope (the MLA serving win).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ArchConfig, AttentionKind
+from repro.models.layers import ParamDef, fsdp_axis, rope
+
+Params = Dict[str, jnp.ndarray]
+
+
+# =========================================================================== defs
+def attn_defs(cfg: ArchConfig, cross: bool = False) -> Dict[str, ParamDef]:
+    d, hd, H, Hkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    f = fsdp_axis(getattr(cfg, "fsdp", False))
+    if cfg.attention == AttentionKind.MLA and not cross:
+        qr, kvr, rd = cfg.q_lora_rank, cfg.kv_lora_rank, cfg.rope_head_dim
+        return {
+            "wq_a": ParamDef((d, qr), P(f, None), init="fan_in"),
+            "q_norm": ParamDef((qr,), P(None), init="ones"),
+            "wq_b": ParamDef((qr, H * (hd + rd)), P(None, "model"), init="fan_in"),
+            "wkv_a": ParamDef((d, kvr + rd), P(f, None), init="fan_in"),
+            "kv_norm": ParamDef((kvr,), P(None), init="ones"),
+            "wkv_b": ParamDef((kvr, H * 2 * hd), P(None, "model"), init="fan_in"),
+            "wo": ParamDef((H * hd, d), P("model", f), init="fan_in"),
+        }
+    out = {
+        "wq": ParamDef((d, H * hd), P(f, "model"), init="fan_in"),
+        "wk": ParamDef((d, Hkv * hd), P(f, "model"), init="fan_in"),
+        "wv": ParamDef((d, Hkv * hd), P(f, "model"), init="fan_in"),
+        "wo": ParamDef((H * hd, d), P("model", f), init="fan_in"),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamDef((H * hd,), P("model"), init="zeros")
+        out["bk"] = ParamDef((Hkv * hd,), P("model"), init="zeros")
+        out["bv"] = ParamDef((Hkv * hd,), P("model"), init="zeros")
+    return out
+
+
+# ====================================================================== core math
+def _sdpa_chunked(
+    q: jnp.ndarray,  # (B, T, H, dh)
+    k: jnp.ndarray,  # (B, S, Hkv, dh)
+    v: jnp.ndarray,
+    causal: bool,
+    window: int,
+    q_offset: int,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Query-chunked attention; remat'ed chunk body keeps memory O(chunk*S)."""
+    B, T, H, dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = dh**-0.5
+    qg = q.reshape(B, T, Hkv, g, dh)
+    kpos = jnp.arange(S)
+
+    def on_chunk(qc, qpos):
+        # qc: (B, c, Hkv, g, dh); qpos: (c,)
+        # fp32 scores/softmax; the probability matrix is *stored* in the
+        # compute dtype (bf16) for the p@v GEMM — the (c, S) tensors are the
+        # HBM hot spot of long-sequence training (EXPERIMENTS.md §Perf; a
+        # fully-bf16 score path was tried and REFUTED: the fp32-reduction
+        # casts materialize more convert traffic than they save).
+        s = jnp.einsum("bthgd,bshd->bthgs", qc * scale, k,
+                       preferred_element_type=jnp.float32)
+        mask = jnp.ones((qpos.shape[0], S), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= (qpos[:, None] + q_offset)
+        if window > 0:
+            mask &= kpos[None, :] > (qpos[:, None] + q_offset - window)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - m)
+        p = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(q.dtype)
+        return jnp.einsum("bthgs,bshd->bthgd", p, v,
+                          preferred_element_type=jnp.float32)
+
+    dv = v.shape[-1]  # value head dim (MLA: dv != dh of q/k)
+    chunk = min(chunk, T)
+    if T % chunk != 0:
+        chunk = T  # odd sizes: single chunk
+    nck = T // chunk
+    if nck == 1:
+        out = on_chunk(qg, jnp.arange(T))
+    else:
+        qs = qg.reshape(B, nck, chunk, Hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+        pos = jnp.arange(T).reshape(nck, chunk)
+        out = jax.lax.map(jax.checkpoint(lambda args: on_chunk(*args)), (qs, pos))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, Hkv, g, dv)
+    return out.reshape(B, T, H, dv).astype(q.dtype)
+
+
+def _flash_sharded(q, k, v, mesh, batch_axes, causal, window, q_offset):
+    """Pallas flash kernel under shard_map (batch × kv-head parallel)."""
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    def body(q_, k_, v_):
+        return flash_attention(
+            jnp.transpose(q_, (0, 2, 1, 3)),
+            jnp.transpose(k_, (0, 2, 1, 3)),
+            jnp.transpose(v_, (0, 2, 1, 3)),
+            causal=causal, window=window, q_offset=q_offset,
+        ).transpose(0, 2, 1, 3)
+
+    spec = P(batch_axes, None, "model", None)
+    f = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+                      out_specs=spec, check_vma=False)
+    return f(q, k, v)
+
+
+# ================================================================== GQA train path
+def attention_train(
+    params: Params,
+    x: jnp.ndarray,  # (B, T, D)
+    cfg: ArchConfig,
+    causal: bool = True,
+    q_offset: int = 0,
+    kv_src: Optional[jnp.ndarray] = None,  # cross-attention source (B, S, D)
+    mesh=None,
+    batch_axes=None,
+    use_flash: bool = False,
+) -> jnp.ndarray:
+    B, T, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.attention == AttentionKind.MLA and kv_src is None:
+        return _mla_train(params, x, cfg, causal)
+    src = x if kv_src is None else kv_src
+    S = src.shape[1]
+    q = (x @ params["wq"]).reshape(B, T, H, hd)
+    k = (src @ params["wk"]).reshape(B, S, Hkv, hd)
+    v = (src @ params["wv"]).reshape(B, S, Hkv, hd)
+    if "bq" in params:
+        q = q + params["bq"].reshape(H, hd)
+        k = k + params["bk"].reshape(Hkv, hd)
+        v = v + params["bv"].reshape(Hkv, hd)
+    if kv_src is None:  # self-attention: rope
+        q = rope(q, jnp.arange(T) + q_offset, cfg.rope_theta)
+        k = rope(k, jnp.arange(S), cfg.rope_theta)
+    window = cfg.window if cfg.attention == AttentionKind.SWA else 0
+    if use_flash and mesh is not None and causal and kv_src is None:
+        o = _flash_sharded(q, k, v, mesh, batch_axes, causal, window, q_offset)
+    else:
+        o = _sdpa_chunked(q, k, v, causal=causal and kv_src is None,
+                          window=window, q_offset=q_offset)
+    return o.reshape(B, T, H * hd) @ params["wo"]
+
+
+def _mla_split(params, x, cfg):
+    B, T, D = x.shape
+    H, hd, rd = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    from repro.models.layers import rmsnorm
+
+    cq = rmsnorm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    qall = (cq @ params["wq_b"]).reshape(B, T, H, hd + rd)
+    q_nope, q_rope = qall[..., :hd], qall[..., hd:]
+    kv_a = x @ params["wkv_a"]  # (B, T, kvr + rd)
+    c_kv = rmsnorm(kv_a[..., : cfg.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., cfg.kv_lora_rank:].reshape(B, T, 1, rd)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_train(params, x, cfg, causal):
+    B, T, D = x.shape
+    H, hd, rd = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_split(params, x, cfg)
+    pos = jnp.arange(T)
+    q_rope = rope(q_rope, pos, cfg.rope_theta)
+    k_rope = rope(k_rope, pos, cfg.rope_theta)
+    kv = (c_kv @ params["wkv_b"]).reshape(B, T, H, 2 * hd)
+    k_nope, v = kv[..., :hd], kv[..., hd:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, T, H, rd))], axis=-1)
+    o = _sdpa_chunked(q, k, v, causal=causal, window=0, q_offset=0)
+    return o.reshape(B, T, H * hd) @ params["wo"]
+
+
+# ================================================================== decode path
+def cache_defs(cfg: ArchConfig, batch: int, seq: int, batch_axes=None,
+               seq_axes=None, cross_len: int = 0, model_par: int = 1):
+    """ShapeDtype + sharding specs for this layer kind's decode cache.
+
+    ``batch_axes``: mesh axes sharding the batch dim (None = replicated, e.g.
+    long_500k batch=1). ``seq_axes``: axes sharding the cache sequence dim
+    (sequence-parallel KV cache, used when the batch cannot shard)."""
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ba, sa = batch_axes, seq_axes
+    if cfg.attention == AttentionKind.MLA:
+        kvr, rd = cfg.kv_lora_rank, cfg.rope_head_dim
+        # latent dim striped over 'model': the absorbed-score contraction over
+        # kvr becomes partial-sum + all-reduce (GSPMD), and the cache — MLA's
+        # whole point — stays small per chip.
+        kspec = "model" if (model_par > 1 and kvr % model_par == 0) else None
+        return {
+            "c_kv": ParamDef((batch, seq, kvr), P(ba, sa, kspec),
+                             init="zeros", dtype=dt),
+            "k_rope": ParamDef((batch, seq, rd), P(ba, sa, None),
+                               init="zeros", dtype=dt),
+        }
+    W = cfg.window if (cfg.attention == AttentionKind.SWA and cfg.window) else 0
+    S = min(seq, W) if W else seq
+    # shard whichever cache axis divides the model-parallel degree:
+    # kv heads when possible (GQA kv=8 < 16-way TP falls back to head_dim)
+    if model_par <= 1:
+        hspec, dspec = None, None
+    elif Hkv % model_par == 0:
+        hspec, dspec = "model", None
+    elif hd % model_par == 0:
+        hspec, dspec = None, "model"
+    else:
+        hspec, dspec = None, None
+    out = {
+        "k": ParamDef((batch, S, Hkv, hd), P(ba, sa, hspec, dspec),
+                      init="zeros", dtype=dt),
+        "v": ParamDef((batch, S, Hkv, hd), P(ba, sa, hspec, dspec),
+                      init="zeros", dtype=dt),
+    }
+    if cross_len:
+        out["xk"] = ParamDef((batch, cross_len, Hkv, hd),
+                             P(ba, None, hspec, dspec), init="zeros", dtype=dt)
+        out["xv"] = ParamDef((batch, cross_len, Hkv, hd),
+                             P(ba, None, hspec, dspec), init="zeros", dtype=dt)
+    return out
+
+
+def attention_decode(
+    params: Params,
+    x1: jnp.ndarray,  # (B, 1, D)
+    cache: Dict[str, jnp.ndarray],
+    index: jnp.ndarray,  # () int32 — position of this token
+    cfg: ArchConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B = x1.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.attention == AttentionKind.MLA:
+        return _mla_decode(params, x1, cache, index, cfg)
+
+    q = (x1 @ params["wq"]).reshape(B, 1, H, hd)
+    k1 = (x1 @ params["wk"]).reshape(B, 1, Hkv, hd)
+    v1 = (x1 @ params["wv"]).reshape(B, 1, Hkv, hd)
+    if "bq" in params:
+        q = q + params["bq"].reshape(H, hd)
+        k1 = k1 + params["bk"].reshape(Hkv, hd)
+        v1 = v1 + params["bv"].reshape(Hkv, hd)
+    posv = jnp.full((1,), index, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k1 = rope(k1, posv, cfg.rope_theta)
+
+    S = cache["k"].shape[1]
+    ring = cfg.attention == AttentionKind.SWA and cfg.window and S == cfg.window
+    slot = (index % S) if ring else index
+    k = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    if ring:
+        sl = jnp.arange(S)
+        kpos = index - ((index - sl) % S)  # latest pos ≤ index congruent to slot
+        valid = (kpos >= 0) & (kpos > index - cfg.window)
+    else:
+        kpos = jnp.arange(S)
+        valid = kpos <= index
+        if cfg.attention == AttentionKind.SWA and cfg.window:
+            valid &= kpos > index - cfg.window
+    o = _decode_sdpa(q, k, v, valid)
+    y = o.reshape(B, 1, H * hd) @ params["wo"]
+    return y, {**cache, "k": k, "v": v}
+
+
+def _decode_sdpa(q, k, v, valid):
+    B, _, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32) * hd**-0.5,
+                   k.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cross_attention_decode(params, x1, cache, cfg):
+    """Decoder cross-attention against prefilled encoder K/V."""
+    B = x1.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x1 @ params["wq"]).reshape(B, 1, H, hd)
+    valid = jnp.ones((cache["xk"].shape[1],), dtype=bool)
+    o = _decode_sdpa(q, cache["xk"], cache["xv"], valid)
+    return o.reshape(B, 1, H * hd) @ params["wo"]
+
+
+def _mla_decode(params, x1, cache, index, cfg):
+    B = x1.shape[0]
+    H, hd, rd, kvr = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
+    q_nope, q_rope, c_kv1, k_rope1 = _mla_split(params, x1, cfg)
+    posv = jnp.full((1,), index, jnp.int32)
+    q_rope = rope(q_rope, posv, cfg.rope_theta)  # (B,1,H,rd)
+    k_rope1 = rope(k_rope1, posv, cfg.rope_theta)  # (B,1,1,rd)
+    ck = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv1.astype(cache["c_kv"].dtype), (0, index, 0))
+    kr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope1[:, :, 0].astype(cache["k_rope"].dtype),
+        (0, index, 0))
+    # absorbed scores: q̃ = q_nope @ W_uk  (per head), score = q̃·c_kv + q_rope·k_rope
+    wkv = params["wkv_b"].reshape(kvr, H, 2 * hd)
+    w_uk = wkv[:, :, :hd]  # (kvr, H, hd)
+    w_uv = wkv[:, :, hd:]  # (kvr, H, hd)
+    qt = jnp.einsum("bhd,khd->bhk", q_nope[:, 0], w_uk)  # (B,H,kvr)
+    s = jnp.einsum("bhk,bsk->bhs", qt.astype(jnp.float32),
+                   ck.astype(jnp.float32))
+    s = s + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                       kr.astype(jnp.float32))
+    s = s * (hd + rd) ** -0.5
+    valid = jnp.arange(ck.shape[1]) <= index
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    lat = jnp.einsum("bhs,bsk->bhk", p, ck.astype(jnp.float32))  # (B,H,kvr)
+    o = jnp.einsum("bhk,khd->bhd", lat, w_uv).astype(x1.dtype)  # (B,H,hd)
+    y = o.reshape(B, 1, H * hd) @ params["wo"]
+    return y, {**cache, "c_kv": ck, "k_rope": kr}

@@ -1,0 +1,167 @@
+"""Parameter definitions, norms, rope, embeddings, sharded cross-entropy.
+
+Params are nested dicts of arrays. Every init site creates a ``ParamDef``
+carrying (shape, dtype, init, PartitionSpec); ``materialize`` instantiates
+real arrays, ``abstract`` gives ShapeDtypeStructs (for the dry-run, which
+must never allocate), and ``specs`` the sharding tree.
+
+Sharding vocabulary (see DESIGN.md §4):
+  'model'  — tensor-parallel axis (heads / ffn / experts / vocab)
+  FSDP     — when cfg wants it, the non-'model' weight axis is sharded over
+             'data' (ZeRO-3 style); GSPMD all-gathers per scan step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ParamDef:
+    shape: Tuple[int, ...]
+    spec: P
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def materialize(self, key: jax.Array) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        std = self.scale
+        if self.init == "fan_in":
+            std = 1.0 / math.sqrt(self.shape[0])
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(self.dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def materialize(defs, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    return treedef.unflatten([d.materialize(k) for d, k in zip(leaves, keys)])
+
+
+def abstract(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def specs(defs):
+    return jax.tree.map(lambda d: d.spec, defs, is_leaf=is_def)
+
+
+def stack_defs(defs_list):
+    """Stack per-layer defs along a leading scan axis."""
+    def stk(*ds):
+        d0 = ds[0]
+        return ParamDef(
+            shape=(len(ds),) + d0.shape,
+            spec=P(*((None,) + tuple(d0.spec))),
+            init=d0.init,
+            scale=d0.scale,
+            dtype=d0.dtype,
+        )
+
+    return jax.tree.map(stk, *defs_list, is_leaf=is_def)
+
+
+# --------------------------------------------------------------------------- ops
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def layernorm(x, w, b, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.mean(jnp.square(x - m), axis=-1, keepdims=True)
+    return ((x - m) * jax.lax.rsqrt(v + eps) * w + b).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, n, dh) rotary on last dim; positions (..., T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq  # (..., T, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def activation_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ----------------------------------------------------------------- cross entropy
+def cross_entropy_logits(
+    logits: jnp.ndarray, labels: jnp.ndarray, vocab: int
+) -> jnp.ndarray:
+    """Mean next-token CE; logits may be vocab-sharded (GSPMD reduces)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def chunked_cross_entropy(
+    x: jnp.ndarray,  # (B, T, D) final hidden states
+    unembed: jnp.ndarray,  # (D, Vp)
+    labels: jnp.ndarray,  # (B, T)
+    chunk: int,
+) -> jnp.ndarray:
+    """Streaming-softmax CE over vocab tiles: the (B, T, V) logits tensor is
+    never materialized (the V=256k memory/collective blowup — see
+    EXPERIMENTS.md §Perf). The remat'ed scan body recomputes each tile's
+    logits in the backward pass."""
+    D, Vp = unembed.shape
+    assert Vp % chunk == 0, (Vp, chunk)
+    nck = Vp // chunk
+    tiles = unembed.T.reshape(nck, chunk, D)
+    B, T = labels.shape
+    m0 = jnp.full((B, T), -1e30, jnp.float32)  # running max
+    s0 = jnp.zeros((B, T), jnp.float32)  # running sum(exp(l - m))
+    l0 = jnp.zeros((B, T), jnp.float32)  # label logit
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m, s, lab = carry
+        w, idx = inp
+        logits = (x @ w.T).astype(jnp.float32)  # (B, T, chunk)
+        cm = jnp.maximum(m, jnp.max(logits, axis=-1))
+        s = s * jnp.exp(m - cm) + jnp.sum(jnp.exp(logits - cm[..., None]), -1)
+        loc = labels - idx * chunk
+        hit = (loc >= 0) & (loc < chunk)
+        ll = jnp.take_along_axis(logits, jnp.clip(loc, 0, chunk - 1)[..., None],
+                                 axis=-1)[..., 0]
+        lab = lab + jnp.where(hit, ll, 0.0)
+        return (cm, s, lab), None
+
+    (m, s, lab), _ = jax.lax.scan(body, (m0, s0, l0),
+                                  (tiles, jnp.arange(nck)))
+    return jnp.mean(jnp.log(s) + m - lab)
+
+
+# ----------------------------------------------------------------- common defs
+def dense_def(din: int, dout: int, spec: P, init="fan_in", scale=0.02) -> ParamDef:
+    return ParamDef((din, dout), spec, init=init, scale=scale)
+
+
+def fsdp_axis(fsdp: bool) -> Optional[str]:
+    return "data" if fsdp else None

@@ -1,0 +1,178 @@
+"""FFN layers: dense (gated / gelu) and Mixture-of-Experts.
+
+MoE strategy (see DESIGN.md §4): activations stay replicated across the
+'model' axis (Megatron convention); experts are sharded over 'model'.
+Each rank routes the *full local token set* to the experts it owns through a
+capacity-bounded scatter (no (T, E, C) one-hot), computes its expert FFNs,
+scatters back weighted outputs, and a single psum over 'model' combines —
+the same collective cost as a Megatron TP all-reduce.
+
+When n_experts < model-axis size (mixtral 8e on 16-way TP), the layer falls
+back to tensor-parallel experts: every rank owns all experts on a d_ff slice;
+the identical body works because the final psum then completes the d_ff
+contraction instead of the expert union.
+
+Implemented with shard_map nested inside the pjit'ed model so the collective
+pattern is explicit (and visible to the roofline pass).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ArchConfig
+from repro.models.layers import ParamDef, activation_fn, fsdp_axis
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ------------------------------------------------------------------- dense FFN
+def ffn_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, ff = cfg.d_model, cfg.d_ff
+    f = fsdp_axis(getattr(cfg, "fsdp", False))
+    out = {
+        "w_up": ParamDef((d, ff), P(f, "model"), init="fan_in"),
+        "w_down": ParamDef((ff, d), P("model", f), init="fan_in"),
+    }
+    if cfg.activation == "silu":
+        out["w_gate"] = ParamDef((d, ff), P(f, "model"), init="fan_in")
+    return out
+
+
+def ffn_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    act = activation_fn(cfg.activation)
+    h = x @ params["w_up"]
+    if "w_gate" in params:
+        h = act(x @ params["w_gate"]) * h
+    else:
+        h = act(h)
+    return h @ params["w_down"]
+
+
+# ------------------------------------------------------------------------- MoE
+def moe_defs(cfg: ArchConfig, model_par: int) -> Dict[str, ParamDef]:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    f = fsdp_axis(getattr(cfg, "fsdp", False))
+    ep = E % model_par == 0 and E >= model_par  # expert-parallel vs TP-experts
+    espec = P("model", f, None) if ep else P(None, f, "model")
+    dspec = P("model", None, f) if ep else P(None, "model", f)
+    out = {
+        "router": ParamDef((d, E), P(f, None), init="fan_in"),
+        "w_up": ParamDef((E, d, ff), espec, init="fan_in"),
+        "w_down": ParamDef((E, ff, d), dspec, init="fan_in"),
+    }
+    if cfg.activation == "silu":
+        out["w_gate"] = ParamDef((E, d, ff), espec, init="fan_in")
+    return out
+
+
+def _moe_local(params, x, cfg: ArchConfig, model_par: int, expert_par: bool):
+    """Per-device body (inside shard_map over 'model').
+
+    x: (Bl, S, D) — this data shard's tokens, replicated over 'model'.
+    expert weights: (e_local, D, ff_local)."""
+    B, S, D = x.shape
+    T = B * S
+    k = cfg.moe_top_k
+    E = cfg.n_experts
+    act = activation_fn(cfg.activation)
+    xf = x.reshape(T, D)
+
+    logits = (xf @ params["router"]).astype(jnp.float32)  # (T, E) replicated
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, k)  # (T, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)  # renormalize
+
+    e_local = params["w_up"].shape[0]
+    e0 = jax.lax.axis_index("model") * e_local if expert_par else 0
+    cap = int(cfg.capacity_factor * T * k / E) + 1
+
+    out = jnp.zeros((T, D), jnp.float32)
+    for j in range(e_local):
+        e = e0 + j
+        hit = topi == e  # (T, k)
+        w = jnp.sum(topw * hit, axis=-1)  # (T,)
+        sel = jnp.any(hit, axis=-1)
+        pos = jnp.cumsum(sel) - 1
+        slot = jnp.where(sel & (pos < cap), pos, cap)  # cap = trash slot
+        buf = jnp.zeros((cap + 1, D), xf.dtype).at[slot].add(
+            jnp.where(sel[:, None], xf, 0))
+        h = buf[:cap] @ params["w_up"][j]
+        if "w_gate" in params:
+            h = act(buf[:cap] @ params["w_gate"][j]) * h
+        else:
+            h = act(h)
+        eo = h @ params["w_down"][j]  # (cap, D)
+        keep = (sel & (pos < cap) & (w > 0)).astype(jnp.float32) * w
+        out = out + eo[jnp.minimum(slot, cap - 1)].astype(jnp.float32) * keep[:, None]
+    # combine in the compute dtype: the (T, D) psum is the layer's dominant
+    # collective; fp32 doubles it for no benefit (<=top_k summands)
+    out = jax.lax.psum(out.astype(x.dtype), "model").astype(jnp.float32)
+    # auxiliary load-balance loss (Switch-style): E * sum_e mean_gate * frac
+    me = jnp.mean(gates, axis=0)  # (E,)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(topi, E, dtype=jnp.float32), axis=1),
+                  axis=0)  # (E,) fraction of tokens routed to e
+    aux = E * jnp.sum(me * ce) / cfg.moe_top_k
+    return out.reshape(B, S, D).astype(x.dtype), aux
+
+
+def moe_apply(
+    params: Params,
+    x: jnp.ndarray,  # (B, S, D) globally batch-sharded
+    cfg: ArchConfig,
+    mesh,
+    batch_axes,
+) -> jnp.ndarray:
+    if mesh is None:
+        # smoke-test path: single device, dense loop over experts
+        out, _ = _moe_dense_ref(params, x, cfg)
+        return out
+    model_par = mesh.shape["model"]
+    ep = cfg.n_experts % model_par == 0 and cfg.n_experts >= model_par
+    # NOTE: in_specs deliberately drop the fsdp ('data') axis — jit reshards
+    # (all-gathers) the weight shards on entry, which IS the FSDP gather.
+    espec = P("model", None, None) if ep else P(None, None, "model")
+    dspec = P("model", None, None) if ep else P(None, "model", None)
+    pspecs = {"router": P(None, None), "w_up": espec, "w_down": dspec}
+    if "w_gate" in params:
+        pspecs["w_gate"] = espec
+    body = functools.partial(_moe_local, cfg=cfg, model_par=model_par,
+                             expert_par=ep)
+    fm = jax.shard_map(
+        lambda p, xx: body(p, xx),
+        mesh=mesh,
+        in_specs=(pspecs, P(batch_axes, None, None)),
+        out_specs=(P(batch_axes, None, None), P()),
+        check_vma=False,
+    )
+    out, _aux = fm(params, x)
+    return out
+
+
+def _moe_dense_ref(params, x, cfg: ArchConfig):
+    """Oracle: every expert sees every token (used by tests & smoke path)."""
+    B, S, D = x.shape
+    T = B * S
+    k = cfg.moe_top_k
+    E = cfg.n_experts
+    act = activation_fn(cfg.activation)
+    xf = x.reshape(T, D)
+    gates = jax.nn.softmax((xf @ params["router"]).astype(jnp.float32), axis=-1)
+    topw, topi = jax.lax.top_k(gates, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    out = jnp.zeros((T, D), jnp.float32)
+    for e in range(E):
+        h = xf @ params["w_up"][e]
+        if "w_gate" in params:
+            h = act(xf @ params["w_gate"][e]) * h
+        else:
+            h = act(h)
+        eo = (h @ params["w_down"][e]).astype(jnp.float32)
+        w = jnp.sum(topw * (topi == e), axis=-1)
+        out = out + eo * w[:, None]
+    return out.reshape(B, S, D).astype(x.dtype), jnp.zeros(())

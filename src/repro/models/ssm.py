@@ -1,0 +1,136 @@
+"""Mamba2 (SSD) mixer: chunked-matmul train path + recurrent decode.
+
+Heads are sharded over 'model' (each head's (P, N) state is independent);
+B/C projections (ngroups=1) are small and replicated. The chunked train path
+is the pure-jnp state-space-duality form (kernels/ssd_scan/ref.py) — the
+Pallas kernel (kernels/ssd_scan) is its serving-path twin and is validated
+against the same oracle.
+
+Decode keeps (conv window, SSM state) per layer: O(1) in sequence length —
+this is why mamba2/jamba run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ArchConfig
+from repro.models.layers import ParamDef, fsdp_axis
+
+Params = Dict[str, jnp.ndarray]
+
+
+def mamba_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.n_mamba_heads
+    cw = cfg.conv_width
+    f = fsdp_axis(cfg.fsdp)
+    return {
+        "w_xz": ParamDef((d, 2 * di), P(f, "model"), init="fan_in"),
+        "w_bc": ParamDef((d, 2 * N), P(f, None), init="fan_in"),
+        "w_dt": ParamDef((d, H), P(f, "model"), init="fan_in"),
+        "dt_bias": ParamDef((H,), P("model"), init="zeros"),
+        "A_log": ParamDef((H,), P("model"), init="zeros"),  # A = -exp(A_log)
+        "D_skip": ParamDef((H,), P("model"), init="ones"),
+        "conv_x": ParamDef((cw, di), P(None, "model"), init="normal", scale=0.5),
+        "conv_bc": ParamDef((cw, 2 * N), P(None, None), init="normal", scale=0.5),
+        "w_out": ParamDef((di, d), P("model", f), init="fan_in"),
+        "norm_z": ParamDef((di,), P("model"), init="ones"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x (B, T, C), w (cw, C)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(cw))
+    return out
+
+
+def mamba_train(params: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    B, T, D = x.shape
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.n_mamba_heads, cfg.mamba_headdim
+    xz = x @ params["w_xz"]
+    xs, z = xz[..., :di], xz[..., di:]
+    bc = x @ params["w_bc"]
+    dt = jnp.clip(jax.nn.softplus((x @ params["w_dt"]).astype(jnp.float32)
+                                   + params["dt_bias"]), 0.0, 1.0)  # (B,T,H)
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_x"]))
+    bc = jax.nn.silu(_causal_conv(bc, params["conv_bc"]))
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,)
+
+    from repro.kernels.ssd_scan.ref import ssd_chunked_jnp
+
+    xh = xs.reshape(B, T, H, Pd).astype(jnp.float32)
+    chunk = 64
+    while T % chunk != 0:
+        chunk //= 2
+    f = jax.vmap(
+        lambda xb, dtb, Bb, Cb: ssd_chunked_jnp(xb, dtb, A, Bb, Cb, chunk=chunk)[0]
+    )
+    y = f(xh, dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32))  # (B,T,H,P)
+    y = y + params["D_skip"][:, None] * xh
+    y = y.reshape(B, T, di).astype(x.dtype)
+    y = y * jax.nn.silu(z) * params["norm_z"]
+    return y @ params["w_out"]
+
+
+# --------------------------------------------------------------------- decode
+def mamba_state_defs(cfg: ArchConfig, batch: int, batch_axes=None,
+                     model_par: int = 1) -> Dict[str, ParamDef]:
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.n_mamba_heads, cfg.mamba_headdim
+    cw = cfg.conv_width
+    bspec = batch_axes if batch_axes else None
+    hspec = "model" if (model_par > 1 and H % model_par == 0) else None
+    dspec = "model" if (model_par > 1 and di % model_par == 0) else None
+    return {
+        "conv_x": ParamDef((batch, cw - 1, di), P(bspec, None, dspec),
+                           init="zeros", dtype=jnp.dtype(cfg.dtype)),
+        "conv_bc": ParamDef((batch, cw - 1, 2 * N), P(bspec, None, None),
+                            init="zeros", dtype=jnp.dtype(cfg.dtype)),
+        "ssm": ParamDef((batch, H, Pd, N), P(bspec, hspec, None, None),
+                        init="zeros", dtype=jnp.float32),
+    }
+
+
+def mamba_decode(
+    params: Params,
+    x1: jnp.ndarray,  # (B, 1, D)
+    state: Dict[str, jnp.ndarray],
+    cfg: ArchConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B = x1.shape[0]
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.n_mamba_heads, cfg.mamba_headdim
+    x = x1[:, 0]  # (B, D)
+    xz = x @ params["w_xz"]
+    xs, z = xz[..., :di], xz[..., di:]
+    bc = x @ params["w_bc"]
+    dt = jnp.clip(jax.nn.softplus((x @ params["w_dt"]).astype(jnp.float32)
+                                   + params["dt_bias"]), 0.0, 1.0)  # (B, H)
+    # (dt clamped to <=1: unbounded softplus dt makes the dt·x⊗B injection
+    # explode under aggressive learning rates — standard mamba dt_limit)
+
+    # conv windows
+    cx = jnp.concatenate([state["conv_x"], xs[:, None].astype(state["conv_x"].dtype)], axis=1)
+    cb = jnp.concatenate([state["conv_bc"], bc[:, None].astype(state["conv_bc"].dtype)], axis=1)
+    xs = jax.nn.silu(jnp.einsum("bwc,wc->bc", cx.astype(jnp.float32),
+                                params["conv_x"].astype(jnp.float32)))
+    bcc = jax.nn.silu(jnp.einsum("bwc,wc->bc", cb.astype(jnp.float32),
+                                 params["conv_bc"].astype(jnp.float32)))
+    Bm, Cm = bcc[..., :N], bcc[..., N:]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(B, H, Pd)
+    a = jnp.exp(A[None] * dt)  # (B, H)
+    s = state["ssm"] * a[..., None, None] + (dt[..., None] * xh)[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", s, Cm)  # (B, H, P)
+    y = y + params["D_skip"][:, None] * xh
+    y = y.reshape(B, di).astype(x1.dtype)
+    y = y * jax.nn.silu(z) * params["norm_z"]
+    out = (y @ params["w_out"])[:, None]
+    return out, {"conv_x": cx[:, 1:], "conv_bc": cb[:, 1:], "ssm": s}

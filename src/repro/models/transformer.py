@@ -1,0 +1,432 @@
+"""Architecture assembly: layer patterns, scan-over-layers, LM / enc-dec.
+
+``build_model(cfg, mesh)`` returns a ``Model`` exposing:
+    defs / init / param_specs           — parameter system (abstract-friendly)
+    forward(params, inputs)             — logits for train/prefill
+    loss(params, inputs)                — next-token CE (+ MoE aux implicitly)
+    cache_defs(batch, seq)              — decode cache pytree defs
+    decode_step(params, caches, token, index) -> (logits, caches)
+
+Layer kinds follow the config's (mixer_pattern, moe_period): jamba's 1-attn-
+per-8 + alternating MoE, mamba2's attention-free stack, whisper's enc-dec.
+Repeating patterns are stacked and scanned (remat'ed) so giant configs lower
+to compact HLO; smoke tests set scan_layers=False and loop.
+
+Frontend stubs per spec: [vlm] patch embeddings overwrite the first
+``n_frontend_tokens`` positions; [audio] the encoder consumes precomputed
+frame embeddings directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ArchConfig, FFNKind, MixerKind
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as SSM
+from repro.models.layers import (
+    ParamDef,
+    abstract,
+    cross_entropy_logits,
+    fsdp_axis,
+    materialize,
+    rmsnorm,
+    specs,
+    stack_defs,
+)
+
+Params = Dict[str, Any]
+
+
+def _pattern(cfg: ArchConfig) -> List[Tuple[MixerKind, FFNKind]]:
+    return [(cfg.mixer_of(i), cfg.ffn_of(i)) for i in range(cfg.n_layers)]
+
+
+def _period(pat: List) -> int:
+    n = len(pat)
+    for p in range(1, n + 1):
+        if n % p == 0 and all(pat[i] == pat[i % p] for i in range(n)):
+            return p
+    return n
+
+
+# ======================================================================== defs
+def _layer_defs(cfg: ArchConfig, kind, cross: bool = False,
+                model_par: int = 1) -> Dict[str, Any]:
+    mixer, ffn = kind
+    d = cfg.d_model
+    out: Dict[str, Any] = {"ln1": ParamDef((d,), P(None), init="ones")}
+    if mixer == MixerKind.ATTN:
+        out["attn"] = A.attn_defs(cfg)
+    else:
+        out["mamba"] = SSM.mamba_defs(cfg)
+    if cross:
+        out["ln_x"] = ParamDef((d,), P(None), init="ones")
+        out["xattn"] = A.attn_defs(cfg, cross=True)
+    if ffn == FFNKind.MOE:
+        out["ln2"] = ParamDef((d,), P(None), init="ones")
+        out["moe"] = M.moe_defs(cfg, model_par=model_par)
+    elif cfg.d_ff > 0:
+        out["ln2"] = ParamDef((d,), P(None), init="ones")
+        out["ffn"] = M.ffn_defs(cfg)
+    return out
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    mesh: Any = None  # jax Mesh or None (smoke tests)
+    use_flash_prefill: bool = False
+
+    def __post_init__(self):
+        cfg = self.cfg
+        self.pattern = _pattern(cfg)
+        self.period = _period(self.pattern) if cfg.scan_layers else cfg.n_layers
+        self.n_groups = cfg.n_layers // self.period
+        self.batch_axes = None
+        if self.mesh is not None:
+            axes = ("pod", "data", "model") if cfg.parallel == "dp" else ("pod", "data")
+            self.batch_axes = tuple(
+                a for a in axes if a in self.mesh.axis_names
+            )
+        if cfg.parallel == "dp":
+            assert cfg.moe_period == 0, "dp mode: MoE needs the 'model' axis"
+        self._build_defs()
+
+    # ---------------------------------------------------------------- params
+    def _build_defs(self):
+        cfg = self.cfg
+        f = fsdp_axis(cfg.fsdp)
+        model_par_ = self.mesh.shape["model"] if self.mesh is not None else 1
+        # pad vocab so the table shards evenly over 'model' (and 128-aligns)
+        mult = 128 * model_par_ if model_par_ > 1 else 8
+        self.padded_vocab = -(-cfg.vocab_size // mult) * mult
+        d = {}
+        d["tok_emb"] = ParamDef((self.padded_vocab, cfg.d_model), P("model", f),
+                                init="normal", scale=0.02)
+        if not cfg.tie_embeddings:
+            d["unembed"] = ParamDef((cfg.d_model, self.padded_vocab),
+                                    P(f, "model"), init="fan_in")
+        d["final_ln"] = ParamDef((cfg.d_model,), P(None), init="ones")
+        model_par = self.mesh.shape["model"] if self.mesh is not None else 1
+        per_group = {
+            f"l{j}": _layer_defs(cfg, self.pattern[j], cross=cfg.enc_dec,
+                                 model_par=model_par)
+            for j in range(self.period)
+        }
+        if self.n_groups > 1:
+            d["layers"] = stack_defs([per_group] * self.n_groups)
+        else:
+            d["layers"] = per_group
+        if cfg.enc_dec:
+            enc_layer = {
+                "ln1": ParamDef((cfg.d_model,), P(None), init="ones"),
+                "attn": A.attn_defs(cfg),
+                "ln2": ParamDef((cfg.d_model,), P(None), init="ones"),
+                "ffn": M.ffn_defs(cfg),
+            }
+            if cfg.n_encoder_layers > 1 and cfg.scan_layers:
+                d["encoder"] = stack_defs([enc_layer] * cfg.n_encoder_layers)
+                self.enc_scan = True
+            else:
+                d["encoder"] = {f"e{i}": enc_layer for i in range(cfg.n_encoder_layers)}
+                # rebuild fresh defs per layer to avoid shared objects
+                d["encoder"] = {
+                    f"e{i}": {
+                        "ln1": ParamDef((cfg.d_model,), P(None), init="ones"),
+                        "attn": A.attn_defs(cfg),
+                        "ln2": ParamDef((cfg.d_model,), P(None), init="ones"),
+                        "ffn": M.ffn_defs(cfg),
+                    }
+                    for i in range(cfg.n_encoder_layers)
+                }
+                self.enc_scan = False
+            d["enc_final_ln"] = ParamDef((cfg.d_model,), P(None), init="ones")
+        if cfg.parallel == "dp" and self.mesh is not None:
+            d = _dp_respec(d, self.mesh)
+        if cfg.param_dtype != "float32":
+            # store >=2D weights in the low-precision dtype (halves FSDP
+            # gather traffic and parameter HBM; Adafactor keeps fp32 stats)
+            pd = jnp.dtype(cfg.param_dtype)
+            d = jax.tree.map(
+                lambda x: dataclasses.replace(x, dtype=pd)
+                if len(x.shape) >= 2 else x,
+                d, is_leaf=lambda x: isinstance(x, ParamDef))
+        self.defs = d
+
+    def init(self, key: jax.Array) -> Params:
+        return materialize(self.defs, key)
+
+    def abstract_params(self):
+        return abstract(self.defs)
+
+    def param_specs(self):
+        return specs(self.defs)
+
+    # --------------------------------------------------------------- forward
+    def _constrain(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, P(*spec)))
+
+    def _apply_layer(self, x, p, kind=None, enc_out=None, use_flash=False):
+        cfg = self.cfg
+        mixer, ffn = kind
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if mixer == MixerKind.ATTN:
+            h = A.attention_train(
+                p["attn"], h, cfg, causal=True, mesh=self.mesh,
+                batch_axes=self.batch_axes, use_flash=use_flash)
+        else:
+            h = SSM.mamba_train(p["mamba"], h, cfg)
+        x = x + h
+        if enc_out is not None:
+            h = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+            h = A.attention_train(p["xattn"], h, cfg, kv_src=enc_out)
+            x = x + h
+        if ffn == FFNKind.MOE:
+            h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            x = x + M.moe_apply(p["moe"], h, cfg, self.mesh, self.batch_axes)
+        elif cfg.d_ff > 0:
+            h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            x = x + M.ffn_apply(p["ffn"], h, cfg)
+        return self._constrain(x, self.batch_axes, None, None)
+
+    def _run_layers(self, x, layers, enc_out=None, use_flash=False):
+        cfg = self.cfg
+
+        def group(x, pg):
+            # (per-layer nested remat was tried here and REFUTED: -8% memory
+            # for +19% compute and +7% collective replay — §Perf hillclimb 2)
+            for j in range(self.period):
+                x = self._apply_layer(x, pg[f"l{j}"], kind=self.pattern[j],
+                                      enc_out=enc_out, use_flash=use_flash)
+            return x
+
+        if self.n_groups > 1:
+            body = lambda x, pg: (group(x, pg), None)
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, layers)
+            return x
+        g = group
+        if cfg.remat:
+            g = jax.checkpoint(g)
+        return g(x, layers)
+
+    def _encode(self, params, frames):
+        """Whisper encoder on precomputed (stub) frame embeddings."""
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.dtype))
+
+        def enc_layer(x, p):
+            h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+            h = A.attention_train(p["attn"], h, cfg, causal=False)
+            x = x + h
+            h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            x = x + M.ffn_apply(p["ffn"], h, cfg)
+            return x
+
+        if getattr(self, "enc_scan", False):
+            body = lambda x, p: (enc_layer(x, p), None)
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, params["encoder"])
+        else:
+            for i in range(cfg.n_encoder_layers):
+                x = enc_layer(x, params["encoder"][f"e{i}"])
+        return rmsnorm(x, params["enc_final_ln"], cfg.norm_eps)
+
+    def embed(self, params, tokens, inputs):
+        cfg = self.cfg
+        x = params["tok_emb"][tokens].astype(jnp.dtype(cfg.dtype))
+        if cfg.frontend.value == "vision" and "patch_embeds" in inputs:
+            pe = inputs["patch_embeds"].astype(x.dtype)
+            x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+        return self._constrain(x, self.batch_axes, None, None)
+
+    def forward(self, params: Params, inputs: Dict[str, jnp.ndarray],
+                use_flash: bool = False) -> jnp.ndarray:
+        cfg = self.cfg
+        cast = jax.tree.map(
+            lambda a: a.astype(jnp.dtype(cfg.dtype))
+            if a.dtype == jnp.float32 and a.ndim >= 2 else a, params)
+        tokens = inputs["tokens"]
+        x = self.embed(cast, tokens, inputs)
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = self._encode(cast, inputs["enc_frames"])
+        x = self._run_layers(x, cast["layers"], enc_out=enc_out,
+                             use_flash=use_flash)
+        x = rmsnorm(x, cast["final_ln"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = x @ cast["tok_emb"].T
+        else:
+            logits = x @ cast["unembed"]
+        vspec = None if cfg.parallel == "dp" else "model"
+        return self._constrain(logits, self.batch_axes, None, vspec)
+
+    def hidden(self, params, inputs) -> jnp.ndarray:
+        """Final hidden states (forward minus unembedding)."""
+        cfg = self.cfg
+        cast = jax.tree.map(
+            lambda a: a.astype(jnp.dtype(cfg.dtype))
+            if a.dtype == jnp.float32 and a.ndim >= 2 else a, params)
+        x = self.embed(cast, inputs["tokens"], inputs)
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = self._encode(cast, inputs["enc_frames"])
+        x = self._run_layers(x, cast["layers"], enc_out=enc_out)
+        return rmsnorm(x, cast["final_ln"], cfg.norm_eps)
+
+    def loss(self, params, inputs) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.ce_chunk:
+            from repro.models.layers import chunked_cross_entropy
+
+            x = self.hidden(params, inputs)
+            unembed = (params["tok_emb"].T if cfg.tie_embeddings
+                       else params["unembed"]).astype(jnp.dtype(cfg.dtype))
+            return chunked_cross_entropy(x[:, :-1], unembed,
+                                         inputs["labels"][:, 1:], cfg.ce_chunk)
+        logits = self.forward(params, inputs)
+        return cross_entropy_logits(logits[:, :-1], inputs["labels"][:, 1:],
+                                    self.cfg.vocab_size)
+
+    # ---------------------------------------------------------------- decode
+    def cache_defs(self, batch: int, seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        machines = 1
+        if self.mesh is not None:
+            import numpy as np
+
+            machines = int(np.prod([self.mesh.shape[a] for a in self.batch_axes]))
+        ba = self.batch_axes if (self.mesh is not None and batch % machines == 0
+                                 and batch >= machines) else None
+        sa = None
+        if ba is None and self.mesh is not None:
+            sa = "data"  # sequence-parallel cache (long_500k)
+
+        model_par = self.mesh.shape["model"] if self.mesh is not None else 1
+
+        def one(kind):
+            mixer, _ = kind
+            out = {}
+            if mixer == MixerKind.ATTN:
+                out.update(A.cache_defs(
+                    cfg, batch, seq, batch_axes=ba, seq_axes=sa,
+                    cross_len=cfg.encoder_ctx if cfg.enc_dec else 0,
+                    model_par=model_par))
+            else:
+                out.update(SSM.mamba_state_defs(cfg, batch, batch_axes=ba,
+                                                model_par=model_par))
+            return out
+
+        per_group = {f"l{j}": one(self.pattern[j]) for j in range(self.period)}
+        if self.n_groups > 1:
+            return stack_defs([per_group] * self.n_groups)
+        return per_group
+
+    def _decode_layer(self, x, p, c, kind, index, moe_axes):
+        cfg = self.cfg
+        mixer, ffn = kind
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if mixer == MixerKind.ATTN:
+            h, c2 = A.attention_decode(p["attn"], h, c, index, cfg)
+            nc = {**c, **c2}
+        else:
+            h, nc = SSM.mamba_decode(p["mamba"], h, c, cfg)
+        x = x + h
+        if cfg.enc_dec:
+            h = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+            h = A.cross_attention_decode(p["xattn"], h, c, cfg)
+            x = x + h
+        if ffn == FFNKind.MOE:
+            h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            x = x + M.moe_apply(p["moe"], h, cfg, self.mesh, moe_axes)
+        elif cfg.d_ff > 0:
+            h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            x = x + M.ffn_apply(p["ffn"], h, cfg)
+        return x, nc
+
+    def decode_step(self, params: Params, caches, token: jnp.ndarray,
+                    index: jnp.ndarray):
+        """token: (B, 1) int32; index: () int32 position. Returns (logits, caches)."""
+        cfg = self.cfg
+        cast = jax.tree.map(
+            lambda a: a.astype(jnp.dtype(cfg.dtype))
+            if a.dtype == jnp.float32 and a.ndim >= 2 else a, params)
+        x = cast["tok_emb"][token].astype(jnp.dtype(cfg.dtype))  # (B,1,D)
+        moe_axes = self.batch_axes
+        if self.mesh is not None and self.batch_axes:
+            import numpy as np
+
+            machines = int(np.prod([self.mesh.shape[a] for a in self.batch_axes]))
+            if token.shape[0] % machines != 0:
+                moe_axes = None  # tiny decode batch: replicate over machines
+
+        def group(x, pg, cg):
+            ncs = {}
+            for j in range(self.period):
+                x, nc = self._decode_layer(x, pg[f"l{j}"], cg[f"l{j}"],
+                                           self.pattern[j], index, moe_axes)
+                ncs[f"l{j}"] = nc
+            return x, ncs
+
+        if self.n_groups > 1:
+            def body(x, pc):
+                pg, cg = pc
+                x, ncs = group(x, pg, cg)
+                return x, ncs
+
+            x, new_caches = jax.lax.scan(body, x, (cast["layers"], caches))
+        else:
+            x, new_caches = group(x, cast["layers"], caches)
+        x = rmsnorm(x, cast["final_ln"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = x @ cast["tok_emb"].T
+        else:
+            logits = x @ cast["unembed"]
+        return self._constrain(logits, None, None, "model"), new_caches
+
+
+def _dp_respec(defs, mesh):
+    """Pure-DP/ZeRO-3 spec rewrite: every weight fully sharded over ALL mesh
+    axes on its largest divisible dim; gathered (bf16) at use by GSPMD."""
+    import numpy as np
+
+    axes = tuple(mesh.axis_names)
+    world = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def respec(d: ParamDef) -> ParamDef:
+        if len(d.shape) < 2:
+            return dataclasses.replace(d, spec=P())
+        order = sorted(range(len(d.shape)), key=lambda i: -d.shape[i])
+        for i in order:
+            if d.shape[i] % world == 0:
+                spec = [None] * len(d.shape)
+                spec[i] = axes
+                return dataclasses.replace(d, spec=P(*spec))
+        # fall back to the largest single-axis-divisible placement
+        for a in axes:
+            n = mesh.shape[a]
+            for i in order:
+                if d.shape[i] % n == 0:
+                    spec = [None] * len(d.shape)
+                    spec[i] = a
+                    return dataclasses.replace(d, spec=P(*spec))
+        return dataclasses.replace(d, spec=P())
+
+    return jax.tree.map(respec, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def build_model(cfg: ArchConfig, mesh=None, use_flash_prefill=False) -> Model:
+    return Model(cfg=cfg, mesh=mesh, use_flash_prefill=use_flash_prefill)

@@ -1,0 +1,13 @@
+from repro.optim.api import make_optimizer
+from repro.optim.sparse_adagrad import (
+    sparse_adagrad_init,
+    sparse_adagrad_update_rows,
+    dense_adagrad_update,
+)
+
+__all__ = [
+    "make_optimizer",
+    "sparse_adagrad_init",
+    "sparse_adagrad_update_rows",
+    "dense_adagrad_update",
+]

@@ -1,0 +1,149 @@
+"""Dense optimizers for the architecture zoo: SGD, AdamW, Adafactor.
+
+Functional optax-style API (optax is not available offline):
+    opt = Optimizer(init, update)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state)
+
+Adafactor (factored second moments) is the default for the >100B MoE
+architectures so optimizer state fits the 16 GB/chip HBM budget at
+256-way sharding (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]  # (params, grads, state) -> (params, state)
+
+
+# --------------------------------------------------------------------------- SGD
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(params, grads, state):
+        if momentum == 0.0:
+            new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+            return new_params, {"step": state["step"] + 1}
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype), state["mu"], grads)
+        new_params = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+        return new_params, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------- AdamW
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        }
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------- Adafactor
+def adafactor(
+    lr: float,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    decay: float = 0.8,
+) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018), the memory-lean
+    choice for the 100B+ architectures. Matrices store row/col statistics only;
+    vectors fall back to full second moments."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "stats": jax.tree.map(leaf, params),
+        }
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            gsq = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(gsq, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(gsq, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                )
+                cfac = jax.lax.rsqrt(vc)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * gsq
+                u = g * jax.lax.rsqrt(v)
+                news = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return newp, news
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["stats"])
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_stats = treedef.unflatten([o[1] for o in outs])
+        return new_params, {"step": step, "stats": new_stats}
+
+    return Optimizer(init, update)

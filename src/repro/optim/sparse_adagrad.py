@@ -1,0 +1,89 @@
+"""Sparse per-row Adagrad — the optimizer DGL-KE uses for embeddings.
+
+DGL-KE performs *sparse gradient updates* (paper §2, §3.4): only the embedding
+rows touched by a mini-batch are read, adjusted by Adagrad, and written back.
+Here the same contract is expressed as functional row updates suitable for
+``jnp.ndarray.at[ids]`` scatter application on a sharded table.
+
+The caller supplies **deduplicated** row ids with aggregated row gradients
+(the host sampler dedups; ``segment_aggregate_rows`` is provided for in-device
+aggregation). Adagrad is nonlinear, so aggregation must precede the update.
+
+Padding convention: ids equal to ``pad_id`` (< 0 after masking, remapped to row
+0 with zero gradient) are no-ops, enabling fixed-size buffers under jit.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdagradState(NamedTuple):
+    # per-element accumulated squared gradients, same shape as the table
+    gsq: jnp.ndarray
+
+
+def sparse_adagrad_init(table: jnp.ndarray) -> AdagradState:
+    return AdagradState(gsq=jnp.zeros_like(table))
+
+
+def segment_aggregate_rows(
+    ids: jnp.ndarray, grads: jnp.ndarray, num_segments: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Aggregate duplicate ids: returns (unique-slot ids, summed grads).
+
+    ``ids``: (n,) int32 row ids (may repeat); ``grads``: (n, d).
+    Output keeps the fixed size n (slots past the uniques hold pad -1).
+    """
+    order = jnp.argsort(ids)
+    sids = ids[order]
+    sg = grads[order]
+    # segment boundaries
+    first = jnp.concatenate([jnp.array([True]), sids[1:] != sids[:-1]])
+    seg = jnp.cumsum(first) - 1  # segment index per row
+    agg = jax.ops.segment_sum(sg, seg, num_segments=ids.shape[0])
+    uniq = jnp.where(first, sids, -1)
+    uid = jax.ops.segment_max(jnp.where(first, sids, -1), seg, num_segments=ids.shape[0])
+    n_uniq = jnp.sum(first)
+    slot_valid = jnp.arange(ids.shape[0]) < n_uniq
+    uid = jnp.where(slot_valid, uid, -1)
+    del uniq, num_segments
+    return uid.astype(jnp.int32), agg
+
+
+def sparse_adagrad_update_rows(
+    table: jnp.ndarray,
+    state: AdagradState,
+    ids: jnp.ndarray,
+    grad_rows: jnp.ndarray,
+    lr: float,
+    eps: float = 1e-10,
+) -> Tuple[jnp.ndarray, AdagradState]:
+    """Apply Adagrad to rows ``ids`` of ``table``. ids<0 are padding no-ops."""
+    valid = (ids >= 0)[:, None]
+    safe_ids = jnp.maximum(ids, 0)
+    g = jnp.where(valid, grad_rows, 0.0).astype(table.dtype)
+    gsq_rows = state.gsq.at[safe_ids].add(jnp.square(g), mode="drop")
+    # read back the *updated* accumulator for the step size (DGL-KE order)
+    new_gsq = gsq_rows
+    denom = jnp.sqrt(new_gsq[safe_ids]) + eps
+    step = jnp.where(valid, lr * g / denom, 0.0)
+    new_table = table.at[safe_ids].add(-step, mode="drop")
+    return new_table, AdagradState(gsq=new_gsq)
+
+
+def dense_adagrad_update(
+    table: jnp.ndarray,
+    state: AdagradState,
+    grad: jnp.ndarray,
+    lr: float,
+    eps: float = 1e-10,
+) -> Tuple[jnp.ndarray, AdagradState]:
+    """Dense reference (what treating embeddings as dense weights costs —
+    the PBG behaviour the paper §3.4 argues against)."""
+    gsq = state.gsq + jnp.square(grad)
+    new_table = table - lr * grad / (jnp.sqrt(gsq) + eps)
+    return new_table, AdagradState(gsq=gsq)

@@ -1,0 +1,35 @@
+"""Test config.
+
+Distributed tests need a small multi-device mesh; we force 8 host devices —
+deliberately NOT the 512-device dry-run setting (that lives only inside
+launch/dryrun.py). Single-device smoke tests are unaffected.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((4, 2), ("data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh_pod():
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+@pytest.fixture(scope="session")
+def small_kg():
+    from repro.data.kg_synth import make_synthetic_kg
+
+    return make_synthetic_kg(n_entities=600, n_relations=24, n_edges=9000,
+                             n_clusters=6, seed=0)

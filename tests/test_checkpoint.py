@@ -1,0 +1,72 @@
+"""Sharding-aware checkpointing round-trips."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.checkpoint import (
+    latest_step, restore_checkpoint, save_checkpoint,
+)
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones(5, jnp.int32), "d": jnp.zeros(())},
+            "l": [jnp.full((2,), 7.0)]}
+    save_checkpoint(str(tmp_path), 3, tree)
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = restore_checkpoint(str(tmp_path), abstract)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_latest_and_prune(tmp_path):
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 5, 9, 12):
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    assert latest_step(str(tmp_path)) == 12
+    kept = sorted(os.listdir(tmp_path))
+    assert len([d for d in kept if d.startswith("step_")]) == 2
+
+
+def test_restore_sharded(tmp_path, mesh8):
+    tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+    save_checkpoint(str(tmp_path), 0, tree)
+    abstract = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    sh = {"w": NamedSharding(mesh8, P("data", "model"))}
+    with jax.set_mesh(mesh8):
+        back = restore_checkpoint(str(tmp_path), abstract, shardings=sh)
+    assert back["w"].sharding.spec == P("data", "model")
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path),
+                           {"w": jax.ShapeDtypeStruct((4, 5), jnp.float32)})
+
+
+def test_missing_leaf_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"w": jnp.zeros(2)})
+    with pytest.raises(KeyError):
+        restore_checkpoint(str(tmp_path),
+                           {"v": jax.ShapeDtypeStruct((2,), jnp.float32)})
+
+
+def test_kge_state_roundtrip(tmp_path, small_kg):
+    from repro.common.config import KGEConfig
+    from repro.core.kge_model import init_state
+
+    cfg = KGEConfig(model="transe_l2", n_entities=small_kg.n_entities,
+                    n_relations=small_kg.n_relations, dim=16, n_parts=1)
+    st = init_state(cfg, jax.random.key(0))
+    save_checkpoint(str(tmp_path), 7, st)
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    back = restore_checkpoint(str(tmp_path), abstract)
+    np.testing.assert_array_equal(np.asarray(st.entity), np.asarray(back.entity))
+    assert int(back.step) == 0

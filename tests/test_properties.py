@@ -1,0 +1,82 @@
+"""Hypothesis property tests on system invariants beyond the per-module ones."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (
+    chunked_cross_entropy, cross_entropy_logits, rmsnorm, rope,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(T=st.integers(1, 16), n=st.integers(1, 4),
+       dh=st.sampled_from([2, 4, 8, 16]), theta=st.sampled_from([1e2, 1e4]))
+def test_rope_preserves_norm(T, n, dh, theta):
+    """Rotary embedding is a rotation: per-pair L2 norms are invariant."""
+    rng = np.random.default_rng(T * 100 + n)
+    x = jnp.asarray(rng.standard_normal((T, n, dh)).astype(np.float32))
+    y = rope(x, jnp.arange(T), theta)
+    half = dh // 2
+    nx = np.square(np.asarray(x[..., :half])) + np.square(np.asarray(x[..., half:]))
+    ny = np.square(np.asarray(y[..., :half])) + np.square(np.asarray(y[..., half:]))
+    np.testing.assert_allclose(ny, nx, rtol=1e-4, atol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """<rope(q,i), rope(k,j)> depends only on i - j (the rope guarantee)."""
+    rng = np.random.default_rng(0)
+    dh = 16
+    q = jnp.asarray(rng.standard_normal((1, 1, dh)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 1, dh)).astype(np.float32))
+
+    def dot_at(i, j):
+        qi = rope(q, jnp.asarray([i]), 1e4)[0, 0]
+        kj = rope(k, jnp.asarray([j]), 1e4)[0, 0]
+        return float(jnp.dot(qi, kj))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+    assert abs(dot_at(0, 0) - dot_at(7, 7)) < 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(B=st.integers(1, 4), T=st.integers(1, 8), D=st.sampled_from([4, 8]),
+       nck=st.sampled_from([1, 2, 4]))
+def test_chunked_ce_property(B, T, D, nck):
+    V = 8 * nck
+    rng = np.random.default_rng(B * 100 + T)
+    x = jnp.asarray(rng.standard_normal((B, T, D)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((D, V)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, V, (B, T)), jnp.int32)
+    full = cross_entropy_logits(x @ w, labels, V)
+    ck = chunked_cross_entropy(x, w, labels, V // nck)
+    np.testing.assert_allclose(ck, full, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 64), eps=st.sampled_from([1e-5, 1e-6]))
+def test_rmsnorm_scale_invariance(n, eps):
+    """rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps effects)."""
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal((2, n)).astype(np.float32) + 0.1)
+    w = jnp.ones((n,))
+    a = rmsnorm(x, w, eps)
+    b = rmsnorm(x * 7.5, w, eps)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_swa_ring_cache_position_formula():
+    """kpos = index - ((index - slot) % W) recovers the newest position <=
+    index stored in each ring slot — exhaustive check for small W."""
+    W = 6
+    for index in range(1, 40):
+        # simulate the ring: slot s holds the latest pos <= index with
+        # pos % W == s
+        want = {}
+        for pos in range(index + 1):
+            want[pos % W] = pos
+        for s in range(W):
+            kpos = index - ((index - s) % W)
+            if kpos >= 0:
+                assert kpos == want.get(s, kpos), (index, s)

@@ -1,0 +1,115 @@
+"""Negative-sampling properties (paper §3.3): the T1 memory claim, T2 degree
+bias, T3 locality; DistSampler buffer invariants."""
+
+import numpy as np
+import pytest
+
+from repro.common.config import KGEConfig
+from repro.core.graph_part import partition
+from repro.core.rel_part import relation_partition
+from repro.core.sampling import (
+    MODES, DistSampler, JointSampler, NaiveSampler, batch_distinct_entities,
+)
+
+
+def _cfg(**kw):
+    base = dict(n_entities=500, n_relations=20, dim=16, batch_size=128,
+                neg_sample_size=64, n_parts=1)
+    base.update(kw)
+    return KGEConfig(**base)
+
+
+def test_joint_touches_fewer_entities(small_kg):
+    """T1: joint sampling must touch ~k + 2b entities instead of ~b*k."""
+    cfg = _cfg(n_entities=small_kg.n_entities, n_relations=small_kg.n_relations)
+    rng = np.random.default_rng(0)
+    joint = JointSampler(small_kg.train, cfg.n_entities, cfg, rng).sample()
+    naive = NaiveSampler(small_kg.train, cfg.n_entities, cfg,
+                         np.random.default_rng(0)).sample()
+    dj = batch_distinct_entities(joint)
+    dn = naive.distinct_entities()
+    assert dj < dn
+    # bound: 2b positives + MODES * ng * k negatives
+    assert dj <= 2 * cfg.batch_size + MODES * cfg.n_neg_groups * cfg.neg_sample_size
+
+
+def test_bytes_formulas():
+    cfg = _cfg(batch_size=1024, neg_sample_size=256, dim=400)
+    # paper §3.3: joint access is ~b/g * k smaller on the negative side
+    assert cfg.batch_bytes_joint() < cfg.batch_bytes_naive() / 20
+
+
+def test_degree_based_negatives_follow_batch_degree(small_kg):
+    """T2: in-batch corruption samples entities ∝ their in-batch frequency."""
+    cfg = _cfg(n_entities=small_kg.n_entities, n_relations=small_kg.n_relations,
+               neg_deg_ratio=1.0, batch_size=512, neg_sample_size=256)
+    rng = np.random.default_rng(0)
+    s = JointSampler(small_kg.train, cfg.n_entities, cfg, rng)
+    counts = np.zeros(small_kg.n_entities)
+    tail_counts = np.zeros(small_kg.n_entities)
+    for _ in range(20):
+        b = s.sample()
+        np.add.at(counts, b.neg[0].reshape(-1), 1)  # tail-corruption negs
+        np.add.at(tail_counts, b.t, 1)
+    # entities never appearing as tails must never be sampled (ratio 1.0)
+    never = tail_counts == 0
+    assert counts[never].sum() == 0
+    # correlation between sampling frequency and tail frequency
+    c = np.corrcoef(counts, tail_counts)[0, 1]
+    assert c > 0.8
+
+
+def test_uniform_negatives_cover_pool(small_kg):
+    cfg = _cfg(n_entities=small_kg.n_entities, n_relations=small_kg.n_relations,
+               neg_deg_ratio=0.0)
+    pool = np.arange(100, 200)
+    s = JointSampler(small_kg.train, cfg.n_entities, cfg,
+                     np.random.default_rng(0), candidate_pool=pool)
+    b = s.sample()
+    assert np.isin(b.neg, pool).all()
+
+
+@pytest.mark.parametrize("partitioner", ["metis", "random"])
+def test_dist_sampler_invariants(small_kg, partitioner):
+    P_ = 4
+    cfg = _cfg(n_entities=small_kg.n_entities, n_relations=small_kg.n_relations,
+               n_parts=P_, batch_size=64, neg_sample_size=32, remote_capacity=64)
+    book = partition(small_kg.train, cfg.n_entities, P_, method=partitioner)
+    rp = relation_partition(small_kg.rel_counts(), P_)
+    s = DistSampler(small_kg.train, book, rp, cfg, np.random.default_rng(0))
+    db = s.sample()
+    L = s.L
+    for p in range(P_):
+        # every local id is a valid machine-local row or pad
+        ids = db.ent_local_ids[p]
+        valid = ids[ids >= 0]
+        assert (valid < book.rows_per_part).all()
+        assert len(np.unique(valid)) == valid.size  # slots deduplicated
+        # slots in range
+        assert (db.h_slot[p] >= 0).all() and (db.h_slot[p] < L).all()  # heads local
+        assert (db.t_slot[p] < L + P_ * s.Rp).all()
+        # negatives strictly local (T3)
+        assert (db.neg_slot[p] < L).all()
+        # remote requests reference peer-local rows
+        req = db.ent_remote_req[p]
+        assert (req[req >= 0] < book.rows_per_part).all()
+        # relation slots within workspace
+        assert (db.rel_slot[p] < s.Lr + P_ * s.Rrp).all()
+
+
+def test_metis_fewer_remote_pulls(small_kg):
+    """T3: METIS partitioning needs fewer remote rows than random."""
+    P_ = 4
+    cfg = _cfg(n_entities=small_kg.n_entities, n_relations=small_kg.n_relations,
+               n_parts=P_, batch_size=128, neg_sample_size=32,
+               remote_capacity=512)
+    used = {}
+    for method in ("metis", "random"):
+        book = partition(small_kg.train, cfg.n_entities, P_, method=method)
+        rp = relation_partition(small_kg.rel_counts(), P_)
+        s = DistSampler(small_kg.train, book, rp, cfg, np.random.default_rng(0))
+        tot = 0
+        for _ in range(5):
+            tot += s.sample().remote_rows_used
+        used[method] = tot
+    assert used["metis"] < used["random"]

@@ -1,0 +1,156 @@
+"""Score-function correctness: oracles, joint-negative decomposition, and
+dim-sharding equivalence (the KVStore-server axis must not change the math)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core import scores as S
+
+MODELS = list(S.MODELS)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 0.5)
+
+
+def _oracle_pos(model, h, r, t, gamma, proj=None, rel_dim=0, scale=1.0):
+    """Straight-line numpy oracle for positive scores."""
+    h, r, t = np.asarray(h, np.float64), np.asarray(r, np.float64), np.asarray(t, np.float64)
+    if model == "transe_l1":
+        return gamma - np.abs(h + r - t).sum(-1)
+    if model == "transe_l2":
+        return gamma - np.sqrt((np.square(h + r - t)).sum(-1) + 1e-12)
+    if model == "distmult":
+        return (h * r * t).sum(-1)
+    if model == "complex":
+        hr, hi = h[..., 0::2], h[..., 1::2]
+        rr, ri = r[..., 0::2], r[..., 1::2]
+        tr, ti = t[..., 0::2], t[..., 1::2]
+        return (hr * rr * tr + hi * rr * ti + hr * ri * ti - hi * ri * tr).sum(-1)
+    if model == "rotate":
+        hr, hi = h[..., 0::2], h[..., 1::2]
+        ph = r[..., 0::2] / scale * np.pi
+        rr, ri = np.cos(ph), np.sin(ph)
+        tr, ti = t[..., 0::2], t[..., 1::2]
+        orr, oii = hr * rr - hi * ri, hr * ri + hi * rr
+        return gamma - np.sqrt((np.square(orr - tr) + np.square(oii - ti)).sum(-1) + 1e-12)
+    if model == "rescal":
+        m = np.asarray(proj, np.float64).reshape(h.shape[0], h.shape[1], rel_dim)
+        return np.einsum("bd,bdr,br->b", h, m, t)
+    if model == "transr":
+        m = np.asarray(proj, np.float64).reshape(h.shape[0], h.shape[1], rel_dim)
+        ph = np.einsum("bd,bdr->br", h, m)
+        pt = np.einsum("bd,bdr->br", t, m)
+        return gamma - np.sqrt((np.square(ph + r - pt)).sum(-1) + 1e-12)
+    raise ValueError(model)
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_positive_score_vs_oracle(model):
+    rng = np.random.default_rng(0)
+    b, d = 16, 32
+    rel_dim = 16 if model == "transr" else d
+    h, t = _rand(rng, b, d), _rand(rng, b, d)
+    r = _rand(rng, b, rel_dim)
+    proj = _rand(rng, b, d * rel_dim) if model in ("transr", "rescal") else None
+    got = S.positive_score(model, h, r, t, 10.0, S.ShardCtx(None),
+                           r_proj=proj, rel_dim=rel_dim, emb_scale=1.0)
+    want = _oracle_pos(model, h, r, t, 10.0, proj, rel_dim, 1.0)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("corrupt", ["tail", "head"])
+def test_negative_matches_positive_form(model, corrupt):
+    """negative_score(cands) at the true entity == positive_score."""
+    rng = np.random.default_rng(1)
+    b, d, k = 8, 32, 5
+    rel_dim = 16 if model == "transr" else d
+    h, t = _rand(rng, b, d), _rand(rng, b, d)
+    r = _rand(rng, b, rel_dim)
+    proj = _rand(rng, b, d * rel_dim) if model in ("transr", "rescal") else None
+    negs = _rand(rng, k, d)
+    ctx = S.ShardCtx(None)
+    pos = S.positive_score(model, h, r, t, 10.0, ctx, r_proj=proj,
+                           rel_dim=rel_dim, emb_scale=1.0)
+    for i in range(b):
+        e = (h if corrupt == "tail" else t)[i : i + 1]
+        true_cand = (t if corrupt == "tail" else h)[i : i + 1]
+        cands = jnp.concatenate([negs, true_cand])
+        ns = S.negative_score(model, e, r[i : i + 1], cands, corrupt, 10.0,
+                              ctx, r_proj=None if proj is None else proj[i : i + 1],
+                              rel_dim=rel_dim, emb_scale=1.0)
+        np.testing.assert_allclose(ns[0, -1], pos[i], rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_dim_sharding_equivalence(model, mesh8):
+    """Scores with dim striped over 'model' == unsharded scores."""
+    rng = np.random.default_rng(2)
+    b, d, k = 8, 32, 6
+    rel_dim = d  # transr needs rel_dim divisible too; keep == d
+    h, t = _rand(rng, b, d), _rand(rng, b, d)
+    r = _rand(rng, b, rel_dim)
+    proj = _rand(rng, b, d * rel_dim) if model in ("transr", "rescal") else None
+    negs = _rand(rng, k, d)
+
+    ref_pos = S.positive_score(model, h, r, t, 10.0, S.ShardCtx(None),
+                               r_proj=proj, rel_dim=rel_dim, emb_scale=1.0)
+    ref_neg = S.negative_score(model, h, r, negs, "tail", 10.0, S.ShardCtx(None),
+                               r_proj=proj, rel_dim=rel_dim, emb_scale=1.0)
+
+    ctx = S.ShardCtx("model")
+
+    def body(h_, r_, t_, n_, p_):
+        pos = S.positive_score(model, h_, r_, t_, 10.0, ctx, r_proj=p_,
+                               rel_dim=rel_dim, emb_scale=1.0)
+        neg = S.negative_score(model, h_, r_, n_, "tail", 10.0, ctx, r_proj=p_,
+                               rel_dim=rel_dim, emb_scale=1.0)
+        return pos, neg
+
+    dspec = P(None, "model")
+    # TransR/RESCAL proj rows are (d, rel_dim) flattened row-major: striping
+    # the first (d) axis == striping the flattened row in blocks of rel_dim;
+    # reshape to (b, d, rel_dim) and shard the middle axis.
+    pspec = P(None, "model", None)
+    p3 = None if proj is None else proj.reshape(b, d, rel_dim)
+
+    def body2(h_, r_, t_, n_, p_):
+        pp = None if p_ is None else p_.reshape(p_.shape[0], -1)
+        return body(h_, r_, t_, n_, pp)
+
+    f = jax.shard_map(
+        body2, mesh=mesh8,
+        in_specs=(dspec, dspec, dspec, dspec, pspec),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    with jax.set_mesh(mesh8):
+        pos, neg = jax.jit(f)(h, r, t, negs, p3)
+    np.testing.assert_allclose(pos, ref_pos, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(neg, ref_neg, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    k=st.integers(1, 20),
+    d=st.integers(1, 40),
+    mode=st.sampled_from(["dot", "l2sq", "l1"]),
+)
+def test_pairwise_scores_property(b, k, d, mode):
+    rng = np.random.default_rng(b * 1000 + k * 10 + d)
+    o = jnp.asarray(rng.standard_normal((b, d)).astype(np.float32))
+    n = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32))
+    got = S.pairwise_scores(mode, o, n)
+    if mode == "dot":
+        want = np.asarray(o) @ np.asarray(n).T
+    elif mode == "l2sq":
+        want = ((np.asarray(o)[:, None] - np.asarray(n)[None]) ** 2).sum(-1)
+    else:
+        want = np.abs(np.asarray(o)[:, None] - np.asarray(n)[None]).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
