@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, kg_fixture, time_loop
+from repro.common.compat import set_mesh
 from repro.common.config import KGEConfig
 from repro.core.distributed import build_dist_train_step, init_dist_state, make_program
 from repro.core.graph_part import partition
@@ -34,7 +35,7 @@ def run():
                             rp.n_shared)
         sampler = DistSampler(kg.train, book, rp, cfg, np.random.default_rng(0))
         step, state_sh, batch_sh = build_dist_train_step(prog, mesh)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             state = jax.device_put(init_dist_state(prog, jax.random.key(0)),
                                    state_sh)
             db = sampler.sample()

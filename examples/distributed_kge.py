@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.compat import set_mesh
 from repro.common.config import KGEConfig
 from repro.core.distributed import build_dist_train_step, init_dist_state, make_program
 from repro.core.graph_part import cut_fraction, partition
@@ -33,7 +34,7 @@ def run(partitioner: str, kg, cfg, mesh, steps=60):
     prog = make_program(cfg, book.rows_per_part, rp.slots_per_part, rp.n_shared)
     sampler = DistSampler(kg.train, book, rp, cfg, np.random.default_rng(0))
     step, state_sh, batch_sh = build_dist_train_step(prog, mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = jax.device_put(init_dist_state(prog, jax.random.key(0)), state_sh)
         losses, drops = [], 0
         t0 = time.time()

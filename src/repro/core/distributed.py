@@ -6,7 +6,7 @@ Mesh layout (see DESIGN.md §4):
   'model' axis                                        ≙ KVStore servers inside
         a machine: every table row is dim-striped across them.
 
-One train step, entirely inside ``jax.shard_map``:
+One train step, entirely inside ``compat.shard_map``:
 
   1. pull: local entity rows (shared-memory fast path, 0 ICI) + remote rows
      via capacity-bounded all_to_all (embeddings/kvstore.py); relations the
@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.common import compat
 from repro.common.config import KGEConfig
 from repro.core import losses as L
 from repro.core import scores as S
@@ -348,7 +349,7 @@ def build_dist_train_step(prog: DistKGEProgram, mesh: Mesh, pairwise_fn=None):
 
     body = functools.partial(_device_step, prog, maxis, pairwise_fn=pairwise_fn,
                              n_servers=int(mesh.shape["model"]))
-    smapped = jax.shard_map(
+    smapped = compat.shard_map(
         body, mesh=mesh,
         in_specs=(state_specs, batch_specs),
         out_specs=(state_specs, metric_specs),
@@ -356,7 +357,7 @@ def build_dist_train_step(prog: DistKGEProgram, mesh: Mesh, pairwise_fn=None):
     )
     state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
                             is_leaf=lambda x: isinstance(x, P))
-    return jax.jit(smapped, donate_argnums=(0,)), state_sh, jax.tree.map(
+    return compat.jit(smapped, donate_argnums=(0,)), state_sh, jax.tree.map(
         lambda s: NamedSharding(mesh, s), batch_specs,
         is_leaf=lambda x: isinstance(x, P))
 

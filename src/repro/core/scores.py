@@ -33,6 +33,8 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.common import compat
+
 AxisName = Union[str, Tuple[str, ...], None]
 
 MODELS = ("transe_l1", "transe_l2", "distmult", "complex", "rotate", "transr", "rescal")
@@ -68,8 +70,8 @@ class ShardCtx:
         if isinstance(self.axis, tuple):
             import numpy as np
 
-            return int(np.prod([jax.lax.axis_size(a) for a in self.axis]))
-        return jax.lax.axis_size(self.axis)
+            return int(np.prod([compat.axis_size(a) for a in self.axis]))
+        return compat.axis_size(self.axis)
 
     def index(self):
         if self.axis is None:

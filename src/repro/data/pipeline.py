@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
+import warnings
 from typing import Callable, Iterator, Optional
 
 
@@ -33,11 +35,23 @@ class Prefetcher:
     def __next__(self):
         return self.q.get()
 
-    def close(self):
+    def close(self, timeout: float = 2.0):
+        # The producer checks _stop only between put attempts, so it can
+        # enqueue one more batch after a single drain and then block in
+        # ``put`` until its 0.5 s timeout — a one-shot drain + join(2.0)
+        # raced that and timed out silently. Drain repeatedly until the
+        # thread actually exits.
         self._stop.set()
-        try:
-            while True:
-                self.q.get_nowait()
-        except queue.Empty:
-            pass
-        self.thread.join(timeout=2.0)
+        deadline = time.monotonic() + timeout
+        while self.thread.is_alive() and time.monotonic() < deadline:
+            try:
+                while True:
+                    self.q.get_nowait()
+            except queue.Empty:
+                pass
+            self.thread.join(timeout=0.05)
+        if self.thread.is_alive():
+            warnings.warn(
+                f"Prefetcher producer thread did not exit within {timeout:.1f}s "
+                "of close(); sample_fn is slow or hung — the daemon thread will "
+                "be abandoned", RuntimeWarning)

@@ -13,7 +13,7 @@ shared-memory fast paths for local rows. On a TPU pod the equivalent is:
   * **remote push** — the reverse route for gradients, after which each owner
     applies the sparse Adagrad update locally.
 
-All functions below run *inside* ``jax.shard_map`` with:
+All functions below run *inside* ``compat.shard_map`` with:
   machine axis  = 'data' (or ('pod','data') on the multi-pod mesh)
   server axis   = 'model'  (dim-striping; never communicated here)
 
@@ -26,8 +26,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple, Union
 
-import jax
 import jax.numpy as jnp
+
+from repro.common import compat
 
 AxisName = Union[str, Tuple[str, ...]]
 
@@ -75,10 +76,10 @@ def pull_remote(
     """
     ax = spec.machine_axis
     # route requests to owners: after a2a, recv[p] = ids peer p asked us for
-    recv = jax.lax.all_to_all(req, ax, split_axis=0, concat_axis=0, tiled=True)
+    recv = compat.all_to_all(req, ax, split_axis=0, concat_axis=0, tiled=True)
     served = spec.wire(_gather_rows(block, recv))  # (n_parts, Rp, d_shard)
     # route rows back to the requesters
-    rows = jax.lax.all_to_all(served, ax, split_axis=0, concat_axis=0, tiled=True)
+    rows = compat.all_to_all(served, ax, split_axis=0, concat_axis=0, tiled=True)
     return rows.reshape(-1, rows.shape[-1]).astype(block.dtype)
 
 
@@ -96,8 +97,8 @@ def push_remote_grads(
     """
     ax = spec.machine_axis
     g = spec.wire(grads).reshape(req.shape[0], -1, grads.shape[-1])
-    recv_ids = jax.lax.all_to_all(req, ax, split_axis=0, concat_axis=0, tiled=True)
-    recv_grads = jax.lax.all_to_all(g, ax, split_axis=0, concat_axis=0, tiled=True)
+    recv_ids = compat.all_to_all(req, ax, split_axis=0, concat_axis=0, tiled=True)
+    recv_grads = compat.all_to_all(g, ax, split_axis=0, concat_axis=0, tiled=True)
     return recv_ids.reshape(-1), recv_grads.reshape(-1, grads.shape[-1]).astype(grads.dtype)
 
 

@@ -7,11 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.common.compat import interpret_kernels as _interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(

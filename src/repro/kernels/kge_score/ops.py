@@ -18,11 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.common.compat import interpret_kernels as _interpret
 from repro.kernels.kge_score.kge_score import l1_bwd_pallas, pairwise_pallas
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:

@@ -7,11 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.common.compat import interpret_kernels as _interpret
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -23,8 +23,9 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.common import compat
 from repro.common.config import INPUT_SHAPES
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, xla_cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import format_row, roofline_from_compiled
 
@@ -57,11 +58,11 @@ def dryrun_arch(arch_name: str, shape_name: str, multi_pod: bool,
     model = build_model(cfg, mesh=mesh, use_flash_prefill=use_flash)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             step, _ = build_train_step(model, shape=shape)
             aps, aos, batch = train_abstract_args(model, shape)
-            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(aps, aos, batch)
+            lowered = compat.jit(step, donate_argnums=(0, 1)).lower(aps, aos, batch)
         elif shape.kind == "prefill":
             step = build_prefill_step(model, use_flash=use_flash)
             aps = jax.tree.map(
@@ -75,7 +76,7 @@ def dryrun_arch(arch_name: str, shape_name: str, multi_pod: bool,
         else:  # decode
             step = build_serve_step(model)
             aps, caches, token, index = serve_abstract_args(model, shape)
-            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            lowered = compat.jit(step, donate_argnums=(1,)).lower(
                 aps, caches, token, index)
         t_lower = time.time() - t0
         t0 = time.time()
@@ -102,7 +103,7 @@ def dryrun_arch(arch_name: str, shape_name: str, multi_pod: bool,
         }
     except Exception:
         pass
-    ca = compiled.cost_analysis()
+    ca = xla_cost_analysis(compiled)
     if ca:
         row["xla_cost_analysis"] = {
             "flops": ca.get("flops"), "bytes accessed": ca.get("bytes accessed")}
@@ -151,7 +152,7 @@ def dryrun_kge(dataset: str, multi_pod: bool, model: str = "",
         }
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = step.lower(sds(prog.state_shapes(), state_sh),
                              sds(prog.batch_shapes(), batch_sh))
         compiled = lowered.compile()

@@ -1,6 +1,6 @@
 """While-loop-aware cost analysis of compiled HLO text.
 
-``compiled.cost_analysis()`` reports each while-loop *body once*, so scanned
+XLA's built-in cost analysis reports each while-loop *body once*, so scanned
 layers / gradient-accumulation loops are undercounted by their trip counts
 (verified empirically: a 6-step lax.scan reports 1/6 the FLOPs of the
 unrolled form). This module re-derives the roofline inputs directly from
@@ -25,7 +25,17 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.common import compat
+
+
+def xla_cost_analysis(compiled) -> Dict[str, Any]:
+    """XLA's own cost analysis of a ``Compiled``, normalized to one flat dict
+    (the raw return type drifted across JAX releases). Use it for the terms
+    our HLO-text analyzer does not model; prefer ``analyze_hlo`` for
+    loop-aware flops/bytes."""
+    return compat.cost_analysis(compiled)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,

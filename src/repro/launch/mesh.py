@@ -6,24 +6,22 @@ Multi-pod:  (2, 16, 16) = ('pod', 'data', 'model') — 512 chips.
 A FUNCTION, not a module constant: importing this module must never touch
 jax device state (smoke tests run with 1 CPU device; only launch/dryrun.py
 sets xla_force_host_platform_device_count).
+
+Mesh construction is version-sensitive (axis-type keywords came and went);
+all of it goes through repro.common.compat.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.common import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/examples (e.g. (4, 2) on 8 CPU devices)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return compat.make_mesh(shape, axes)

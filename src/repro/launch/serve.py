@@ -28,6 +28,7 @@ def main():
     import jax
     import jax.numpy as jnp
 
+    from repro.common import compat
     from repro.configs import get_arch
     from repro.models.transformer import build_model
 
@@ -46,7 +47,7 @@ def main():
         model.cache_defs(B, total),
         is_leaf=lambda x: hasattr(x, "materialize"))
 
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    decode = compat.jit(model.decode_step, donate_argnums=(1,))
 
     # prefill via decode loop (prefill_step exists for the batch path; the
     # serving loop here feeds the prompt token by token to fill the caches)

@@ -173,6 +173,7 @@ def _train_distributed(args, cfg, kg, pairwise_fn):
     from repro.core.distributed import build_dist_train_step, init_dist_state, make_program
     from repro.core.graph_part import cut_fraction, partition
     from repro.core.rel_part import relation_partition
+    from repro.common.compat import set_mesh
     from repro.core.sampling import DistSampler
     from repro.data.pipeline import Prefetcher
     from repro.launch.mesh import make_mesh
@@ -191,7 +192,7 @@ def _train_distributed(args, cfg, kg, pairwise_fn):
     sampler = DistSampler(kg.train, book, rp, cfg, np.random.default_rng(args.seed))
     step, state_sh, batch_sh = build_dist_train_step(prog, mesh, pairwise_fn)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = jax.device_put(init_dist_state(prog, jax.random.key(args.seed)),
                                state_sh)
 

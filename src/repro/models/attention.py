@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common import compat
 from repro.common.config import ArchConfig, AttentionKind
 from repro.models.layers import ParamDef, fsdp_axis, rope
 
@@ -121,8 +122,8 @@ def _flash_sharded(q, k, v, mesh, batch_axes, causal, window, q_offset):
         ).transpose(0, 2, 1, 3)
 
     spec = P(batch_axes, None, "model", None)
-    f = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
-                      out_specs=spec, check_vma=False)
+    f = compat.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec, check_vma=False)
     return f(q, k, v)
 
 

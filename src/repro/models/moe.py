@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common import compat
 from repro.common.config import ArchConfig
 from repro.models.layers import ParamDef, activation_fn, fsdp_axis
 
@@ -143,7 +144,7 @@ def moe_apply(
         pspecs["w_gate"] = espec
     body = functools.partial(_moe_local, cfg=cfg, model_par=model_par,
                              expert_par=ep)
-    fm = jax.shard_map(
+    fm = compat.shard_map(
         lambda p, xx: body(p, xx),
         mesh=mesh,
         in_specs=(pspecs, P(batch_axes, None, None)),

@@ -1,0 +1,142 @@
+"""Fallback for ``hypothesis`` so property tests degrade instead of erroring.
+
+When hypothesis is installed (see requirements-dev.txt) this module re-exports
+the real ``given`` / ``settings`` / ``strategies`` untouched. When it is not,
+a tiny shim runs each property test over seeded-numpy sampled cases: the
+first two draws are the min/max corners of every strategy, the rest are
+uniform draws from a generator seeded by the test name — deterministic across
+runs, no shrinking, but the invariant still gets exercised.
+
+Only the strategy combinators this repo uses are implemented: ``integers``,
+``sampled_from``, ``lists``, ``floats``, ``booleans``.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """draw(rng) -> value; corner(i) -> boundary example or None."""
+
+        def draw(self, rng):
+            raise NotImplementedError
+
+        def corner(self, i):
+            return None
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+        def corner(self, i):
+            return (self.lo, self.hi)[i] if i < 2 else None
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def draw(self, rng):
+            return self.elements[int(rng.integers(len(self.elements)))]
+
+        def corner(self, i):
+            return self.elements[i] if i < min(2, len(self.elements)) else None
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value=0.0, max_value=1.0, **_kw):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def draw(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+        def corner(self, i):
+            return (self.lo, self.hi)[i] if i < 2 else None
+
+    class _Booleans(_Strategy):
+        def draw(self, rng):
+            return bool(rng.integers(2))
+
+        def corner(self, i):
+            return (False, True)[i] if i < 2 else None
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=10, **_kw):
+            self.elements = elements
+            self.min_size, self.max_size = int(min_size), int(max_size)
+
+        def draw(self, rng):
+            n = int(rng.integers(self.min_size, self.max_size + 1))
+            return [self.elements.draw(rng) for _ in range(n)]
+
+        def corner(self, i):
+            if i >= 2:
+                return None
+            n = (max(self.min_size, 1), self.max_size)[i]
+            rng = np.random.default_rng(n)
+            return [self.elements.draw(rng) for _ in range(n)]
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        integers = staticmethod(_Integers)
+        sampled_from = staticmethod(_SampledFrom)
+        lists = staticmethod(_Lists)
+        floats = staticmethod(_Floats)
+        booleans = staticmethod(_Booleans)
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            # hypothesis maps positional strategies to the RIGHTMOST params;
+            # everything not driven by a strategy is a pytest fixture
+            pos_names = ([p.name for p in params[len(params) - len(arg_strategies):]]
+                         if arg_strategies else [])
+            strat_map = dict(zip(pos_names, arg_strategies))
+            strat_map.update(kw_strategies)
+            remaining = [p for p in params if p.name not in strat_map]
+
+            @functools.wraps(fn)
+            def wrapper(**fixture_kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    corners = {k: s.corner(i) for k, s in strat_map.items()}
+                    if i < 2 and corners and all(
+                            v is not None for v in corners.values()):
+                        drawn = corners
+                    else:
+                        drawn = {k: s.draw(rng) for k, s in strat_map.items()}
+                    fn(**fixture_kwargs, **drawn)
+
+            # hide strategy-driven params from pytest's fixture resolution
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            wrapper._max_examples = _DEFAULT_MAX_EXAMPLES
+            wrapper.hypothesis_shim = True
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def decorate(fn):
+            if hasattr(fn, "_max_examples"):
+                fn._max_examples = max_examples
+            return fn
+
+        return decorate
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "strategies"]

@@ -11,6 +11,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.common.checkpoint import (
     latest_step, restore_checkpoint, save_checkpoint,
 )
+from repro.common.compat import set_mesh
 
 
 def test_roundtrip(tmp_path):
@@ -38,7 +39,7 @@ def test_restore_sharded(tmp_path, mesh8):
     save_checkpoint(str(tmp_path), 0, tree)
     abstract = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
     sh = {"w": NamedSharding(mesh8, P("data", "model"))}
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         back = restore_checkpoint(str(tmp_path), abstract, shardings=sh)
     assert back["w"].sharding.spec == P("data", "model")
     np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))

@@ -1,0 +1,259 @@
+"""The version-portable JAX surface (repro/common/compat.py).
+
+The compat layer is the repo's two-version contract: every function must
+behave identically through the "old" (jax 0.4.x) and "new" (current stable)
+API shapes. Both shapes are exercised here via monkeypatched fake jax
+modules, plus an integration pass against whichever real JAX is installed.
+"""
+
+import enum
+import types
+
+import numpy as np
+import pytest
+
+from repro.common import compat
+
+
+# ----------------------------------------------------------------- fake jaxes
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+
+
+class _Recorder:
+    """Callable that records (args, kwargs) and returns a sentinel."""
+
+    def __init__(self, result="result", reject=()):
+        self.calls = []
+        self.result = result
+        self.reject = tuple(reject)
+
+    def __call__(self, *args, **kwargs):
+        for bad in self.reject:
+            if bad in kwargs:
+                raise TypeError(f"unexpected keyword argument {bad!r}")
+        self.calls.append((args, kwargs))
+        return self.result
+
+
+class _CtxRecorder:
+    """Context-manager factory recording enter/exit."""
+
+    def __init__(self):
+        self.entered = []
+        self.exited = []
+
+    def __call__(self, mesh):
+        rec = self
+
+        class _Ctx:
+            def __enter__(self):
+                rec.entered.append(mesh)
+                return mesh
+
+            def __exit__(self, *exc):
+                rec.exited.append(mesh)
+                return False
+
+        return _Ctx()
+
+
+def fake_new_jax():
+    """Current-stable shape: AxisType, make_mesh(axis_types=), jax.shard_map
+    with check_vma, jax.set_mesh."""
+    jx = types.SimpleNamespace()
+    jx.__version__ = "0.7.2"
+    jx.__name__ = "fake_new_jax"
+    jx.sharding = types.SimpleNamespace(AxisType=_AxisType)
+    jx.make_mesh = _Recorder(result="new-mesh")
+    jx.shard_map = _Recorder(result="new-mapped", reject=("check_rep",))
+    jx.set_mesh = _CtxRecorder()
+    jx.jit = _Recorder(result="new-jitted")
+    jx.lax = types.SimpleNamespace(
+        with_sharding_constraint=_Recorder(result="new-constrained"))
+    jx.default_backend = lambda: "tpu"
+    return jx
+
+
+def fake_old_jax():
+    """0.4.x shape: no AxisType, make_mesh without axis_types, shard_map in
+    jax.experimental with check_rep, no set_mesh (Mesh is the context)."""
+    jx = types.SimpleNamespace()
+    jx.__version__ = "0.4.37"
+    jx.__name__ = "fake_old_jax"
+    jx.sharding = types.SimpleNamespace()  # no AxisType, no use_mesh
+    jx.make_mesh = _Recorder(result="old-mesh", reject=("axis_types",))
+    jx.experimental = types.SimpleNamespace(
+        shard_map=types.SimpleNamespace(
+            shard_map=_Recorder(result="old-mapped", reject=("check_vma",))))
+    jx.jit = _Recorder(result="old-jitted", reject=("donate_argnums",))
+    jx.lax = types.SimpleNamespace(
+        with_sharding_constraint=_Recorder(result="old-constrained"))
+    jx.default_backend = lambda: "cpu"
+    return jx
+
+
+@pytest.fixture(params=["old", "new"])
+def fake(request, monkeypatch):
+    jx = fake_old_jax() if request.param == "old" else fake_new_jax()
+    monkeypatch.setattr(compat, "jax", jx)
+    return request.param, jx
+
+
+# ---------------------------------------------------------------- both shapes
+def test_make_mesh_both_shapes(fake):
+    kind, jx = fake
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
+    assert mesh == f"{kind}-mesh"
+    (args, kwargs), = jx.make_mesh.calls
+    assert args == ((4, 2), ("data", "model"))
+    if kind == "new":
+        assert kwargs == {"axis_types": (_AxisType.Auto, _AxisType.Auto)}
+    else:
+        assert kwargs == {}
+
+
+def test_shard_map_both_shapes(fake):
+    kind, jx = fake
+
+    def body(x):
+        return x
+
+    out = compat.shard_map(body, mesh="m", in_specs="i", out_specs="o",
+                           check_vma=False)
+    assert out == f"{kind}-mapped"
+    rec = jx.shard_map if kind == "new" else jx.experimental.shard_map.shard_map
+    (args, kwargs), = rec.calls
+    assert args == (body,)
+    assert kwargs["mesh"] == "m"
+    assert kwargs["in_specs"] == "i" and kwargs["out_specs"] == "o"
+    flag = "check_vma" if kind == "new" else "check_rep"
+    assert kwargs[flag] is False
+
+
+def test_capability_probe_both_shapes(fake):
+    kind, _ = fake
+    assert compat.has_explicit_sharding() == (kind == "new")
+    assert compat.backend() == ("tpu" if kind == "new" else "cpu")
+    # kernels interpret exactly when there is no TPU
+    assert compat.interpret_kernels() == (kind != "new")
+    assert compat.jax_version() == ((0, 7, 2) if kind == "new" else (0, 4, 37))
+
+
+def test_jit_donation_both_shapes(fake):
+    kind, jx = fake
+    out = compat.jit(abs, donate_argnums=(0,), static_argnames=("k",))
+    assert out == f"{kind}-jitted"
+    (args, kwargs), = jx.jit.calls
+    assert args == (abs,)
+    assert kwargs.get("static_argnames") == ("k",)
+    if kind == "new":
+        assert kwargs.get("donate_argnums") == (0,)
+    else:  # donation keyword rejected -> retried without it
+        assert "donate_argnums" not in kwargs
+
+
+def test_with_sharding_constraint_both_shapes(fake):
+    kind, jx = fake
+    assert compat.with_sharding_constraint("x", "s") == f"{kind}-constrained"
+    (args, _), = jx.lax.with_sharding_constraint.calls
+    assert args == ("x", "s")
+
+
+# --------------------------------------------------- transitional make_mesh
+def test_make_mesh_axis_type_without_keyword(monkeypatch):
+    """AxisType exists but make_mesh predates the axis_types keyword."""
+    jx = fake_new_jax()
+    jx.make_mesh = _Recorder(result="mid-mesh", reject=("axis_types",))
+    monkeypatch.setattr(compat, "jax", jx)
+    assert compat.make_mesh((2,), ("data",)) == "mid-mesh"
+    (args, kwargs), = jx.make_mesh.calls
+    assert args == ((2,), ("data",)) and kwargs == {}
+
+
+def test_set_mesh_new_uses_setter(monkeypatch):
+    jx = fake_new_jax()
+    monkeypatch.setattr(compat, "jax", jx)
+    with compat.set_mesh("the-mesh") as m:
+        assert m == "the-mesh"
+        assert jx.set_mesh.entered == ["the-mesh"]
+    assert jx.set_mesh.exited == ["the-mesh"]
+
+
+def test_set_mesh_old_enters_mesh(monkeypatch):
+    jx = fake_old_jax()
+    monkeypatch.setattr(compat, "jax", jx)
+    log = []
+
+    class Mesh:
+        def __enter__(self):
+            log.append("enter")
+            return self
+
+        def __exit__(self, *exc):
+            log.append("exit")
+            return False
+
+    with compat.set_mesh(Mesh()):
+        assert log == ["enter"]
+    assert log == ["enter", "exit"]
+
+
+# -------------------------------------------------------------- cost analysis
+class _Compiled:
+    def __init__(self, raw):
+        self.raw = raw
+
+    def cost_analysis(self):
+        return self.raw
+
+
+@pytest.mark.parametrize("raw", [
+    [{"flops": 10.0, "bytes accessed": 5.0}],           # 0.4.x list shape
+    {"flops": 10.0, "bytes accessed": 5.0},             # new dict shape
+])
+def test_cost_analysis_normalizes_both_shapes(raw):
+    assert compat.cost_analysis(_Compiled(raw)) == {
+        "flops": 10.0, "bytes accessed": 5.0}
+
+
+def test_cost_analysis_none_and_multi_program():
+    assert compat.cost_analysis(_Compiled(None)) == {}
+    multi = [{"flops": 10.0, "label": "a"}, {"flops": 2.5, "label": "b"}]
+    out = compat.cost_analysis(_Compiled(multi))
+    assert out["flops"] == 12.5        # numeric keys sum across programs
+    assert out["label"] == "a"         # non-numeric keep first occurrence
+
+
+# ----------------------------------------------------------- real-jax contract
+def test_real_make_mesh_and_shard_map(mesh8):
+    """Integration: the installed JAX (whichever line) passes through compat."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    assert tuple(mesh8.axis_names) == ("data", "model")
+    f = compat.shard_map(
+        lambda x: jax.lax.psum(x, "data"), mesh=mesh8,
+        in_specs=P("data"), out_specs=P(None), check_vma=False)
+    with compat.set_mesh(mesh8):
+        out = compat.jit(f, donate_argnums=())(jnp.arange(8.0))
+    want = np.arange(8.0).reshape(4, 2).sum(axis=0)  # psum over the 4 blocks
+    np.testing.assert_allclose(np.asarray(out), want)
+
+
+def test_real_cost_analysis_is_dict():
+    import jax
+    import jax.numpy as jnp
+
+    compiled = jax.jit(lambda x: x @ x).lower(
+        jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
+    ca = compat.cost_analysis(compiled)
+    assert isinstance(ca, dict) and ca.get("flops", 0) > 0
+
+
+def test_real_backend_probe():
+    assert compat.backend() in ("cpu", "gpu", "tpu")
+    assert compat.interpret_kernels() == (compat.backend() != "tpu")
+    assert compat.jax_version() >= (0, 4, 0)

@@ -17,6 +17,7 @@ from repro.core.graph_part import partition
 from repro.core.rel_part import relation_partition
 from repro.core.sampling import DistSampler
 from repro.embeddings.kvstore import KVStoreSpec, pull_local, pull_remote, push_remote_grads
+from repro.common.compat import set_mesh, shard_map
 
 
 def test_kvstore_pull_remote_roundtrip(mesh8):
@@ -34,13 +35,13 @@ def test_kvstore_pull_remote_roundtrip(mesh8):
     def body(tbl, rq):
         return pull_remote(tbl, jnp.squeeze(rq, 0), spec)  # (P*Rp, ds)
 
-    f = jax.shard_map(
+    f = shard_map(
         body, mesh=mesh8,
         in_specs=(P("data", "model"), P("data", None, None)),
         out_specs=P("data", "model"),
         check_vma=False,
     )
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         out = jax.jit(f)(jnp.asarray(table), jnp.asarray(req))
     out = np.asarray(out).reshape(P_, P_, Rp, d)
     for p in range(P_):
@@ -62,13 +63,13 @@ def test_kvstore_push_grads_reach_owner(mesh8):
         ids, gr = push_remote_grads(jnp.squeeze(g, 0), jnp.squeeze(rq, 0), spec)
         return ids[None], gr[None]
 
-    f = jax.shard_map(
+    f = shard_map(
         body, mesh=mesh8,
         in_specs=(P("data", None, "model"), P("data", None, None)),
         out_specs=(P("data", None), P("data", None, "model")),
         check_vma=False,
     )
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         ids, gr = jax.jit(f)(jnp.asarray(grads), jnp.asarray(req))
     ids, gr = np.asarray(ids), np.asarray(gr)
     # owner p receives, from peer q at slot j, the gradient q computed for
@@ -93,7 +94,7 @@ def test_dist_training_learns(small_kg, mesh8, model, overlap):
     prog = make_program(cfg, book.rows_per_part, rp.slots_per_part, rp.n_shared)
     sampler = DistSampler(small_kg.train, book, rp, cfg, np.random.default_rng(0))
     step, state_sh, batch_sh = build_dist_train_step(prog, mesh8)
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         state = jax.device_put(init_dist_state(prog, jax.random.key(0)), state_sh)
         losses = []
         for _ in range(12):
@@ -115,7 +116,7 @@ def test_multi_pod_mesh_runs(small_kg, mesh_pod):
     prog = make_program(cfg, book.rows_per_part, rp.slots_per_part, rp.n_shared)
     sampler = DistSampler(small_kg.train, book, rp, cfg, np.random.default_rng(0))
     step, state_sh, batch_sh = build_dist_train_step(prog, mesh_pod)
-    with jax.set_mesh(mesh_pod):
+    with set_mesh(mesh_pod):
         state = jax.device_put(init_dist_state(prog, jax.random.key(0)), state_sh)
         for _ in range(4):
             db = sampler.sample()
@@ -135,7 +136,7 @@ def test_transr_distributed(small_kg, mesh8):
     prog = make_program(cfg, book.rows_per_part, rp.slots_per_part, rp.n_shared)
     sampler = DistSampler(small_kg.train, book, rp, cfg, np.random.default_rng(0))
     step, state_sh, batch_sh = build_dist_train_step(prog, mesh8)
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         state = jax.device_put(init_dist_state(prog, jax.random.key(0)), state_sh)
         losses = []
         for _ in range(8):
@@ -164,7 +165,7 @@ def test_dist_step_with_pallas_kernel(small_kg, mesh8):
                               np.random.default_rng(0))
         step, state_sh, batch_sh = build_dist_train_step(prog, mesh8,
                                                          pairwise_fn)
-        with jax.set_mesh(mesh8):
+        with set_mesh(mesh8):
             st = jax.device_put(init_dist_state(prog, jax.random.key(0)),
                                 state_sh)
             out = []

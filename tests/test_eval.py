@@ -1,7 +1,7 @@
 """Evaluation metrics (paper §5.3) and ranking machinery."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.eval import Metrics, build_filter_map, metrics_from_ranks
 

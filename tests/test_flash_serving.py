@@ -10,6 +10,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.models.attention import attention_train
 from repro.models.transformer import build_model
+from repro.common.compat import set_mesh
 
 RNG = np.random.default_rng(0)
 
@@ -20,7 +21,7 @@ def test_flash_prefill_matches_chunked(mesh8):
     model = build_model(cfg, mesh=mesh8)
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         params = model.init(jax.random.key(0))
         params = jax.device_put(params, jax.tree.map(
             lambda s: NamedSharding(mesh8, s), model.param_specs(),
@@ -47,7 +48,7 @@ def test_flash_sharded_raw(mesh8):
     params = materialize(A.attn_defs(cfg), jax.random.key(1))
     x = jnp.asarray(RNG.standard_normal((B, T, d)).astype(np.float32) * 0.3)
     ref = A.attention_train(params, x, cfg, causal=True)
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         out = jax.jit(lambda p, xx: A.attention_train(
             p, xx, cfg, causal=True, mesh=mesh8, batch_axes=("data",),
             use_flash=True))(params, x)

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.hlo_analysis import analyze_hlo, parse_computations
+from repro.launch.hlo_analysis import analyze_hlo, parse_computations, xla_cost_analysis
+from repro.common.compat import set_mesh, shard_map
 
 
 def test_scan_flops_multiplied():
@@ -23,7 +24,7 @@ def test_scan_flops_multiplied():
     want = 6 * 2 * 128 * 256 * 256
     assert abs(c.flops - want) / want < 0.01
     # XLA's own analysis misses the trip count — ours must exceed it
-    xla = compiled.cost_analysis()["flops"]
+    xla = xla_cost_analysis(compiled)["flops"]
     assert c.flops > 3 * xla
 
 
@@ -56,12 +57,12 @@ def test_collectives_counted_with_ring_factors(mesh8):
 
         return jax.lax.scan(body, x, ws)[0]
 
-    sm = jax.shard_map(g, mesh=mesh8,
+    sm = shard_map(g, mesh=mesh8,
                        in_specs=(P("data", None), P(None, None, "model")),
                        out_specs=P("data", None), check_vma=False)
     x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
     ws = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32)
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         txt = jax.jit(sm).lower(x, ws).compile().as_text()
     c = analyze_hlo(txt, total_devices=8)
     assert c.collectives["all-reduce"].count == 6

@@ -12,6 +12,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCHS
 from repro.models import moe as M
 from repro.models.transformer import build_model
+from repro.common.compat import set_mesh
 
 RNG = np.random.default_rng(0)
 
@@ -34,7 +35,7 @@ def test_moe_shard_map_matches_dense(mesh8, E, topk):
     params = materialize(defs, jax.random.key(0))
     x = jnp.asarray(RNG.standard_normal((4, 8, cfg.d_model)).astype(np.float32))
     want, _ = M._moe_dense_ref(params, x, cfg)
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         got = jax.jit(
             lambda p, xx: M.moe_apply(p, xx, cfg, mesh8, ("data",))
         )(params, x)

@@ -13,6 +13,7 @@ from repro.configs import get_arch
 from repro.core import scores as S
 from repro.models.layers import chunked_cross_entropy, cross_entropy_logits
 from repro.models.transformer import build_model
+from repro.common.compat import set_mesh, shard_map
 
 RNG = np.random.default_rng(0)
 
@@ -44,7 +45,7 @@ def test_dp_mode_loss_equals_tp(mesh8):
         m = build_model(cfg, mesh=mesh8)
         if params0 is None:
             params0 = m.init(jax.random.key(0))
-        with jax.set_mesh(mesh8):
+        with set_mesh(mesh8):
             p = jax.device_put(params0, jax.tree.map(
                 lambda s: NamedSharding(mesh8, s), m.param_specs(),
                 is_leaf=lambda x: isinstance(x, P)))
@@ -70,11 +71,11 @@ def test_negative_sharded_equals_psum(mesh8, model):
                                        S.ShardCtx("model"), emb_scale=1.0)
         return out  # (b, k/2) local slice
 
-    f = jax.shard_map(body, mesh=mesh8,
+    f = shard_map(body, mesh=mesh8,
                       in_specs=(P(None, "model"), P(None, "model"),
                                 P(None, "model")),
                       out_specs=P(None, "model"), check_vma=False)
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         got = jax.jit(f)(h, r, negs)
     # out_specs concatenates the k/2 slices along axis 1 in server order —
     # matching the all_to_all(split k) distribution order

@@ -1,0 +1,46 @@
+"""Host prefetch pipeline: ordering, backpressure, and shutdown."""
+
+import threading
+import time
+import warnings
+
+from repro.data.pipeline import Prefetcher
+
+
+def test_prefetch_yields_batches_in_order():
+    counter = iter(range(1000))
+    pf = Prefetcher(lambda: next(counter))
+    got = [next(pf) for _ in range(10)]
+    pf.close()
+    assert got == sorted(got)  # producer is single-threaded: strictly ordered
+
+
+def test_close_joins_producer_promptly():
+    """The producer can sit in q.put with one more batch after a single
+    drain; close() must keep draining until the thread actually exits."""
+    pf = Prefetcher(lambda: 0, depth=1)
+    time.sleep(0.2)  # let the producer fill the queue and block in put()
+    t0 = time.monotonic()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a shutdown-timeout warning = failure
+        pf.close()
+    assert not pf.thread.is_alive()
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_close_warns_on_hung_producer():
+    release = threading.Event()
+
+    def slow_sample():
+        release.wait(10.0)
+        return 0
+
+    pf = Prefetcher(slow_sample)
+    time.sleep(0.05)  # producer is now inside slow_sample
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        pf.close(timeout=0.3)
+    assert any("Prefetcher" in str(w.message) for w in caught)
+    release.set()
+    pf.thread.join(timeout=2.0)
+    assert not pf.thread.is_alive()

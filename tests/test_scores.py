@@ -5,10 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.core import scores as S
+from repro.common.compat import set_mesh, shard_map
 
 MODELS = list(S.MODELS)
 
@@ -123,13 +124,13 @@ def test_dim_sharding_equivalence(model, mesh8):
         pp = None if p_ is None else p_.reshape(p_.shape[0], -1)
         return body(h_, r_, t_, n_, pp)
 
-    f = jax.shard_map(
+    f = shard_map(
         body2, mesh=mesh8,
         in_specs=(dspec, dspec, dspec, dspec, pspec),
         out_specs=(P(), P()),
         check_vma=False,
     )
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         pos, neg = jax.jit(f)(h, r, t, negs, p3)
     np.testing.assert_allclose(pos, ref_pos, rtol=3e-4, atol=3e-4)
     np.testing.assert_allclose(neg, ref_neg, rtol=3e-4, atol=3e-4)

@@ -22,6 +22,7 @@ from repro.core.kge_model import batch_to_device, init_state, make_train_step
 from repro.core.rel_part import relation_partition
 from repro.core.sampling import DistSampler, JointSampler
 from repro.data.kg_synth import make_synthetic_kg
+from repro.common.compat import set_mesh
 
 
 @pytest.fixture(scope="module")
@@ -76,7 +77,7 @@ def test_distributed_matches_single_quality(kg, mesh8):
     prog = make_program(cfg2, book.rows_per_part, rp.slots_per_part, rp.n_shared)
     sampler = DistSampler(kg.train, book, rp, cfg2, np.random.default_rng(0))
     step2, state_sh, batch_sh = build_dist_train_step(prog, mesh8)
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         st2 = jax.device_put(init_dist_state(prog, jax.random.key(0)), state_sh)
         for _ in range(steps):
             db = sampler.sample()
@@ -127,7 +128,7 @@ def test_overlap_update_preserves_quality(kg, mesh8):
         sampler = DistSampler(kg.train, book, rp, cfg,
                               np.random.default_rng(0))
         step, state_sh, batch_sh = build_dist_train_step(prog, mesh8)
-        with jax.set_mesh(mesh8):
+        with set_mesh(mesh8):
             st = jax.device_put(init_dist_state(prog, jax.random.key(0)),
                                 state_sh)
             ls = []
