@@ -18,6 +18,7 @@ from repro.common.config import KGEConfig
 from repro.core import eval as E
 from repro.core.kge_model import batch_to_device, init_state, make_train_step
 from repro.core.sampling import JointSampler
+from repro.launch.engine import train_loop
 
 MODELS = ["transe_l1", "transe_l2", "distmult", "complex", "rotate", "rescal",
           "transr"]
@@ -39,8 +40,8 @@ def run(steps: int = 0):
         step = make_train_step(cfg)
         s = JointSampler(kg.train, cfg.n_entities, cfg,
                          np.random.default_rng(0))
-        for _ in range(steps):
-            state, m = step(state, batch_to_device(s.sample()))
+        state = train_loop(step, state,
+                           lambda: (batch_to_device(s.sample()), None), steps)
         met = E.metrics_from_ranks(
             E.ranks_against_all(cfg, state, kg.test[:200], filter_map=fm))
         emit(f"table5/{model}", 0.0,

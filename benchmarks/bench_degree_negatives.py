@@ -27,6 +27,7 @@ from repro.core import scores as S
 from repro.core.kge_model import batch_to_device, init_state, make_train_step
 from repro.core.sampling import JointSampler
 from repro.data.kg_synth import make_synthetic_kg
+from repro.launch.engine import train_loop
 
 
 def _train(kg, ratio: float, steps: int = 600):
@@ -36,8 +37,8 @@ def _train(kg, ratio: float, steps: int = 600):
     state = init_state(cfg, jax.random.key(0))
     step = make_train_step(cfg)
     s = JointSampler(kg.train, cfg.n_entities, cfg, np.random.default_rng(0))
-    for _ in range(steps):
-        state, _ = step(state, batch_to_device(s.sample()))
+    state = train_loop(step, state,
+                       lambda: (batch_to_device(s.sample()), None), steps)
     return cfg, state
 
 

@@ -1,9 +1,10 @@
 """Paper Fig. 4: overlap of gradient update with batch computation (T5) and
 relation partitioning (T4).
 
-Distributed step time with overlap on/off on the CPU mesh, plus the
-T4 diagnostic (distinct relations touched per machine per batch with
-ownership vs without)."""
+Step time with overlap on/off — distributed on the CPU mesh AND the
+single-machine DenseStore path (overlap is no longer distributed-only) —
+plus the T4 diagnostic (distinct relations touched per machine per batch
+with ownership vs without)."""
 
 from __future__ import annotations
 
@@ -16,8 +17,9 @@ from repro.common.compat import set_mesh
 from repro.common.config import KGEConfig
 from repro.core.distributed import build_dist_train_step, init_dist_state, make_program
 from repro.core.graph_part import partition
+from repro.core.kge_model import batch_to_device, init_state, make_train_step
 from repro.core.rel_part import distinct_relations_per_batch, relation_partition
-from repro.core.sampling import DistSampler
+from repro.core.sampling import DistSampler, JointSampler
 from repro.launch.mesh import make_mesh
 
 
@@ -45,6 +47,24 @@ def _step_time(kg, overlap: bool, mesh):
         return time_loop(one, iters=8)
 
 
+def _single_step_time(kg, overlap: bool):
+    cfg = KGEConfig(model="transe_l2", n_entities=kg.n_entities,
+                    n_relations=kg.n_relations, dim=128, batch_size=512,
+                    neg_sample_size=128, lr=0.1, n_parts=1)
+    state = init_state(cfg, jax.random.key(0), overlap=overlap)
+    step = make_train_step(cfg)
+    sampler = JointSampler(kg.train, cfg.n_entities, cfg,
+                           np.random.default_rng(0))
+    batch = batch_to_device(sampler.sample())
+
+    def one():
+        nonlocal state
+        state, m = step(state, batch)
+        return m
+
+    return time_loop(one, iters=8)
+
+
 def run():
     kg = kg_fixture("medium")
     mesh = make_mesh((4, 2), ("data", "model"))
@@ -52,6 +72,13 @@ def run():
     t_sync = _step_time(kg, overlap=False, mesh=mesh)
     emit("fig4/overlap_async", t_async, f"speedup={t_sync/t_async:.2f}x vs sync")
     emit("fig4/sync", t_sync, "")
+
+    # single-machine T5 (DenseStore deferred update)
+    ts_async = _single_step_time(kg, overlap=True)
+    ts_sync = _single_step_time(kg, overlap=False)
+    emit("fig4/overlap_single_async", ts_async,
+         f"speedup={ts_sync/ts_async:.2f}x vs sync")
+    emit("fig4/single_sync", ts_sync, "")
 
     # T4 relation-locality diagnostic
     rng = np.random.default_rng(0)

@@ -25,7 +25,16 @@ from repro.core.graph_part import cut_fraction, partition
 from repro.core.rel_part import relation_partition
 from repro.core.sampling import DistSampler
 from repro.data.kg_synth import make_synthetic_kg
+from repro.launch.engine import Hook, MetricsHook, train_loop
 from repro.launch.mesh import make_mesh
+
+
+class DropCounter(Hook):
+    def __init__(self):
+        self.drops = 0
+
+    def on_step(self, i, state, metrics, stats):
+        self.drops += stats["dropped"]
 
 
 def run(partitioner: str, kg, cfg, mesh, steps=60):
@@ -34,21 +43,23 @@ def run(partitioner: str, kg, cfg, mesh, steps=60):
     prog = make_program(cfg, book.rows_per_part, rp.slots_per_part, rp.n_shared)
     sampler = DistSampler(kg.train, book, rp, cfg, np.random.default_rng(0))
     step, state_sh, batch_sh = build_dist_train_step(prog, mesh)
+
+    def make_batch():
+        db = sampler.sample()
+        batch = {k: jax.device_put(jnp.asarray(getattr(db, k)), batch_sh[k])
+                 for k in batch_sh}
+        return batch, db.stats
+
+    mh, dc = MetricsHook(["loss"]), DropCounter()
     with set_mesh(mesh):
         state = jax.device_put(init_dist_state(prog, jax.random.key(0)), state_sh)
-        losses, drops = [], 0
         t0 = time.time()
-        for i in range(steps):
-            db = sampler.sample()
-            batch = {k: jax.device_put(jnp.asarray(getattr(db, k)), batch_sh[k])
-                     for k in batch_sh}
-            state, m = step(state, batch)
-            losses.append(float(m["loss"]))
-            drops += db.dropped_triplets
+        train_loop(step, state, make_batch, steps, hooks=[mh, dc])
         dt = time.time() - t0
+    losses = mh.history["loss"]
     cut = cut_fraction(kg.train, book.part_of)
     print(f"{partitioner:7s}: cut {cut:5.1%}  loss {losses[0]:.3f}->{losses[-1]:.3f}  "
-          f"{steps/dt:5.1f} steps/s  dropped {drops}")
+          f"{steps/dt:5.1f} steps/s  dropped {dc.drops}")
     return cut
 
 

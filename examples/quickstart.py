@@ -16,6 +16,7 @@ from repro.core import eval as E
 from repro.core.kge_model import batch_to_device, init_state, make_train_step
 from repro.core.sampling import JointSampler
 from repro.data.kg_synth import make_synthetic_kg
+from repro.launch.engine import LoggingHook, train_loop
 
 
 def main():
@@ -29,10 +30,9 @@ def main():
     state = init_state(cfg, jax.random.key(0))
     step = make_train_step(cfg)
     sampler = JointSampler(kg.train, cfg.n_entities, cfg, np.random.default_rng(0))
-    for i in range(900):
-        state, m = step(state, batch_to_device(sampler.sample()))
-        if (i + 1) % 100 == 0:
-            print(f"step {i+1} loss {float(m['loss']):.4f}")
+    state = train_loop(step, state,
+                       lambda: (batch_to_device(sampler.sample()), None),
+                       n_steps=900, hooks=[LoggingHook(log_every=100)])
     fm = E.build_filter_map(kg.triplets)
     ranks = E.ranks_against_all(cfg, state, kg.test[:500], filter_map=fm)
     met = E.metrics_from_ranks(ranks)

@@ -9,9 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import math
 from dataclasses import dataclass, replace
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 class AttentionKind(str, enum.Enum):

@@ -5,13 +5,17 @@ losses      — logistic / ranking / self-adversarial
 sampling    — joint (T1), degree-based (T2), local (T3) negative sampling
 rel_part    — relation partitioning (T4)
 graph_part  — METIS-like min-cut partitioning (T3)
-kge_model   — single-machine reference training (sparse Adagrad)
-distributed — shard_map cluster training (KVStore pulls, overlap update T5)
+step        — THE train step, parameterized by EmbeddingStores
+kge_model   — single-machine adapter (KGEState <-> DenseStore)
+distributed — shard_map cluster adapter (ShardedStore + KVStore collectives)
 eval        — MRR / MR / Hit@k, both paper protocols
 """
 
 from repro.core import scores, losses, sampling, rel_part, graph_part
-from repro.core.kge_model import KGEState, init_state, make_train_step, train_step
+from repro.core.kge_model import (
+    KGEState, flush_state, init_state, make_train_step, train_step,
+)
+from repro.core.step import store_train_step
 from repro.core.eval import metrics_from_ranks, ranks_against_all, ranks_protocol2
 
 __all__ = [
@@ -22,8 +26,10 @@ __all__ = [
     "graph_part",
     "KGEState",
     "init_state",
+    "flush_state",
     "make_train_step",
     "train_step",
+    "store_train_step",
     "metrics_from_ranks",
     "ranks_against_all",
     "ranks_protocol2",

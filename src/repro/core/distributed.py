@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,16 +35,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.common import compat
 from repro.common.config import KGEConfig
-from repro.core import losses as L
 from repro.core import scores as S
 from repro.core.sampling import MODES
-from repro.embeddings.kvstore import KVStoreSpec, pull_local, pull_remote, push_remote_grads
+from repro.core.step import store_train_step
+from repro.embeddings.kvstore import KVStoreSpec
+from repro.embeddings.store import ReplicatedStore, ShardedIds, ShardedStore
 from repro.embeddings.table import emb_init_scale
-from repro.optim.sparse_adagrad import (
-    AdagradState,
-    segment_aggregate_rows,
-    sparse_adagrad_update_rows,
-)
 
 
 @jax.tree_util.register_dataclass
@@ -147,6 +143,46 @@ def make_program(cfg: KGEConfig, rows_per_part: int, rel_slots: int,
 
 
 # ---------------------------------------------------------------------------
+def stores_from_dist_state(cfg: KGEConfig, state: Dict, spec: KVStoreSpec,
+                           machine_axis) -> Dict[str, object]:
+    """View one machine's state-dict block as EmbeddingStores.
+
+    Tensors must already be machine-local (inside shard_map, or a whole
+    n_parts == 1 state with ``machine_axis=None``). ``pend_ids``/``pend_grads``
+    must be squeezed of the machine axis.
+
+    T5 note: the entity store defers when cfg.overlap_update, and its
+    ``flush()`` (run at the top of the next step) reads the POST-update
+    table. Reading the pre-update table (the literal paper semantics) forces
+    XLA into a copy-on-write of the full entity + Adagrad tables — a
+    2.2 GB/step HBM tax at Freebase scale (EXPERIMENTS.md §Perf hillclimb 3).
+    Reading post-update keeps the one-step deferral of gradient application
+    (the overlap) with *fresher* rows, and the scatter becomes a true
+    in-place update.
+    """
+    stores = {
+        "entity": ShardedStore(
+            state["entity"], state["ent_gsq"],
+            state["pend_ids"], state["pend_grads"],
+            spec=spec, lr=cfg.lr, defer=cfg.overlap_update),
+        # relations are never deferred (paper: trainer-immediate)
+        "rel": ShardedStore(
+            state["r_emb"], state["rel_gsq"],
+            jnp.zeros((0,), jnp.int32), jnp.zeros((0, cfg.rel_dim)),
+            spec=spec, lr=cfg.lr, defer=False),
+        "shared": ReplicatedStore(
+            state["shared_rel"], state["shared_gsq"],
+            lr=cfg.lr, machine_axis=machine_axis),
+    }
+    if "r_proj" in state:
+        stores["proj"] = ShardedStore(
+            state["r_proj"], state["proj_gsq"],
+            jnp.zeros((0,), jnp.int32),
+            jnp.zeros((0, cfg.dim * cfg.rel_dim)),
+            spec=spec, lr=cfg.lr, defer=False)
+    return stores
+
+
 def _device_step(prog: DistKGEProgram, machine_axis, state: Dict, batch: Dict,
                  pairwise_fn=None, n_servers: int = 1):
     """Per-device body (inside shard_map). All tensors are local blocks:
@@ -155,165 +191,41 @@ def _device_step(prog: DistKGEProgram, machine_axis, state: Dict, batch: Dict,
     spec = KVStoreSpec(machine_axis=machine_axis, n_parts=cfg.n_parts,
                        remote_capacity=cfg.remote_capacity,
                        comm_dtype=cfg.comm_dtype)
-    ctx = S.ShardCtx("model")
-    scale = emb_init_scale(cfg)
     sq = lambda x: jnp.squeeze(x, axis=0)  # drop size-1 machine axis
 
-    # ---- T5: apply the deferred entity update from the previous step.
-    # The pulls below read the POST-update table: reading the pre-update
-    # table (the literal paper semantics) forces XLA into a copy-on-write of
-    # the full entity + Adagrad tables — a 2.2 GB/step HBM tax at Freebase
-    # scale (EXPERIMENTS.md §Perf hillclimb 3). Reading post-update keeps the
-    # one-step deferral of gradient application (the overlap) with *fresher*
-    # rows, and the scatter becomes a true in-place update.
-    pend_ids, pend_grads = sq(state["pend_ids"]), sq(state["pend_grads"])
-    uid, agg = segment_aggregate_rows(pend_ids, pend_grads, pend_ids.shape[0])
-    new_ent, ent_ada = sparse_adagrad_update_rows(
-        state["entity"], AdagradState(state["ent_gsq"]), uid, agg, cfg.lr
-    )
+    local_state = dict(state)
+    local_state["pend_ids"] = sq(state["pend_ids"])
+    local_state["pend_grads"] = sq(state["pend_grads"])
+    stores = stores_from_dist_state(cfg, local_state, spec, machine_axis)
+    step_batch = {
+        "ent_ids": ShardedIds(sq(batch["ent_local_ids"]),
+                              sq(batch["ent_remote_req"])),
+        "rel_ids": ShardedIds(sq(batch["rel_local_ids"]),
+                              sq(batch["rel_remote_req"])),
+        "h_slot": sq(batch["h_slot"]),
+        "t_slot": sq(batch["t_slot"]),
+        "neg_slot": sq(batch["neg_slot"]),
+        "rel_slot": sq(batch["rel_slot"]),
+        "rel_shared": sq(batch["rel_shared"]),
+    }
 
-    # ---- 1. pull entity + relation workspaces
-    local_ids = sq(batch["ent_local_ids"])
-    remote_req = sq(batch["ent_remote_req"])
-    ws_local = pull_local(new_ent, local_ids)  # (L, ds)
-    ws_remote = pull_remote(new_ent, remote_req, spec)  # (P*Rp, ds)
-    ws = jnp.concatenate([ws_local, ws_remote], axis=0)
+    new_stores, metrics = store_train_step(
+        cfg, stores, step_batch, ctx=S.ShardCtx("model"),
+        n_servers=n_servers, machine_axis=machine_axis,
+        pairwise_fn=pairwise_fn)
 
-    rel_local_ids = sq(batch["rel_local_ids"])
-    rel_req = sq(batch["rel_remote_req"])
-    rel_ws = jnp.concatenate(
-        [pull_local(state["r_emb"], rel_local_ids),
-         pull_remote(state["r_emb"], rel_req, spec)], axis=0)
-    proj_ws = None
-    if "r_proj" in state:
-        proj_ws = jnp.concatenate(
-            [pull_local(state["r_proj"], rel_local_ids),
-             pull_remote(state["r_proj"], rel_req, spec)], axis=0)
-
-    h_slot, t_slot = sq(batch["h_slot"]), sq(batch["t_slot"])
-    rel_slot, rel_shared = sq(batch["rel_slot"]), sq(batch["rel_shared"])
-    neg_slot = sq(batch["neg_slot"])  # (MODES, ng, k)
-    shared_rows = state["shared_rel"][jnp.maximum(rel_shared, 0)]
-    is_shared = (rel_shared >= 0)[:, None]
-
-    # ---- 2. compute loss + grads w.r.t. workspace rows (sparse!)
-    def loss_fn(ws_, rel_ws_, shared_rows_, proj_ws_):
-        h = ws_[h_slot]
-        t = ws_[t_slot]
-        r_owned = rel_ws_[rel_slot]
-        r = jnp.where(is_shared, shared_rows_, r_owned)
-        pr = None if proj_ws_ is None else proj_ws_[rel_slot]
-        pos = S.positive_score(cfg.model, h, r, t, cfg.gamma, ctx,
-                               r_proj=pr, rel_dim=cfg.rel_dim, emb_scale=scale)
-        b = h.shape[0]
-        ng, k = cfg.n_neg_groups, cfg.neg_sample_size
-        gsz = b // ng
-        # negative-sharding (EXPERIMENTS.md §Perf hillclimb 3): local (b, k/S)
-        # score slices + scalar loss psum, instead of psum-ing (b, k) scores.
-        sharded = (cfg.model not in ("transr", "rescal")
-                   and cfg.loss in ("logistic", "ranking")
-                   and k % n_servers == 0)
-        neg_out = []
-        for m in range(MODES):
-            corrupt = "tail" if m == 0 else "head"
-            e = (h if m == 0 else t).reshape(ng, gsz, -1)
-            rg = r.reshape(ng, gsz, -1)
-            prg = None if pr is None else pr.reshape(ng, gsz, -1)
-            negs = ws_[neg_slot[m]]  # (ng, k, ds)
-
-            if sharded:
-                f = jax.vmap(lambda e1, r1, n1: S.negative_score_sharded(
-                    cfg.model, e1, r1, n1, corrupt, cfg.gamma, ctx,
-                    emb_scale=scale, pairwise_fn=pairwise_fn,
-                    wire_dtype=cfg.comm_dtype))
-                neg_out.append(f(e, rg, negs))  # (ng, gsz, k/S) local
-            else:
-                f = jax.vmap(lambda e1, r1, n1, p1=prg: S.negative_score(
-                    cfg.model, e1, r1, n1, corrupt, cfg.gamma, ctx,
-                    r_proj=None if prg is None else p1, rel_dim=cfg.rel_dim,
-                    emb_scale=scale, pairwise_fn=pairwise_fn),
-                    in_axes=(0, 0, 0) if prg is None else (0, 0, 0, 0))
-                neg_out.append(f(e, rg, negs) if prg is None
-                               else f(e, rg, negs, prg))
-        neg = jnp.stack(neg_out)  # (MODES, ng, gsz, k or k/S)
-        if sharded:
-            # scalar-reduced loss: identical value on every server
-            posf = jnp.concatenate([pos, pos])
-            if cfg.loss == "logistic":
-                neg_sum = jax.lax.psum(jnp.sum(jax.nn.softplus(neg)), "model")
-                loss = jnp.mean(jax.nn.softplus(-posf)) + neg_sum / (MODES * b * k)
-            else:  # ranking: pair each positive with its group's negatives
-                p2 = jnp.stack([pos, pos]).reshape(MODES, ng, gsz, 1)
-                h_ = jnp.maximum(0.0, cfg.gamma - p2 + neg)
-                loss = jax.lax.psum(jnp.sum(h_), "model") / (MODES * b * k)
-            neg_mean = jax.lax.psum(jnp.sum(neg), "model") / (MODES * b * k)
-            return loss, (jnp.mean(pos), neg_mean)
-        loss = L.kge_loss(cfg.loss, jnp.concatenate([pos, pos]),
-                          neg.reshape(MODES * b, -1), margin=cfg.gamma)
-        return loss, (jnp.mean(pos), jnp.mean(neg))
-
-    grad_args = (0, 1, 2) + ((3,) if proj_ws is not None else ())
-    (loss, (pos_m, neg_m)), grads = jax.value_and_grad(
-        loss_fn, argnums=grad_args, has_aux=True
-    )(ws, rel_ws, shared_rows, proj_ws)
-    g_ws, g_rel, g_shared_rows = grads[0], grads[1], grads[2]
-
-    # ---- 3a. entity updates: local now-or-deferred, remote pushed to owner
-    Lsz = prog.L
-    g_local, g_remote = g_ws[:Lsz], g_ws[Lsz:]
-    owner_ids, owner_grads = push_remote_grads(g_remote, remote_req, spec)
-    all_ids = jnp.concatenate([local_ids, owner_ids]).astype(jnp.int32)
-    all_grads = jnp.concatenate([g_local, owner_grads], axis=0)
-    if cfg.overlap_update:
-        # defer: becomes pend_* for the next step (paper T5)
-        new_pend_ids, new_pend_grads = all_ids, all_grads
-        ent_out, ent_gsq_out = new_ent, ent_ada.gsq
-    else:
-        uid2, agg2 = segment_aggregate_rows(all_ids, all_grads, all_ids.shape[0])
-        ent_out, ada2 = sparse_adagrad_update_rows(
-            new_ent, ent_ada, uid2, agg2, cfg.lr)
-        ent_gsq_out = ada2.gsq
-        new_pend_ids = jnp.full_like(pend_ids, -1)
-        new_pend_grads = jnp.zeros_like(pend_grads)
-
-    # ---- 3b. relation updates (owned: local; remote: push back; trainer-
-    # immediate per the paper — relations are never deferred)
-    def rel_update(table, gsq, g_rel_ws, req):
-        g_loc, g_rem = g_rel_ws[: prog.Lr], g_rel_ws[prog.Lr:]
-        oid, ograds = push_remote_grads(g_rem, req, spec)
-        ids = jnp.concatenate([rel_local_ids, oid]).astype(jnp.int32)
-        gs = jnp.concatenate([g_loc, ograds], axis=0)
-        u, a = segment_aggregate_rows(ids, gs, ids.shape[0])
-        return sparse_adagrad_update_rows(table, AdagradState(gsq), u, a, cfg.lr)
-
-    new_rel, rel_ada = rel_update(state["r_emb"], state["rel_gsq"], g_rel, rel_req)
+    ent, rel = new_stores["entity"], new_stores["rel"]
+    shared = new_stores["shared"]
     out = dict(state)
-    if proj_ws is not None:
-        g_proj = grads[3]
-        new_proj, proj_ada = rel_update(state["r_proj"], state["proj_gsq"],
-                                        g_proj, rel_req)
-        out["r_proj"], out["proj_gsq"] = new_proj, proj_ada.gsq
-
-    # ---- 3c. shared (split) relations: scatter + psum over machines (tiny)
-    g_shared = jnp.zeros_like(state["shared_rel"]).at[
-        jnp.maximum(rel_shared, 0)
-    ].add(jnp.where(is_shared, g_shared_rows, 0.0))
-    g_shared = jax.lax.psum(g_shared, machine_axis)
-    sh_gsq = state["shared_gsq"] + jnp.square(g_shared)
-    denom = jnp.sqrt(sh_gsq) + 1e-10
-    new_shared = state["shared_rel"] - cfg.lr * g_shared / denom
-
     out.update(
-        entity=ent_out, ent_gsq=ent_gsq_out, r_emb=new_rel, rel_gsq=rel_ada.gsq,
-        shared_rel=new_shared, shared_gsq=sh_gsq,
-        pend_ids=new_pend_ids[None], pend_grads=new_pend_grads[None],
+        entity=ent.table, ent_gsq=ent.gsq, r_emb=rel.table, rel_gsq=rel.gsq,
+        shared_rel=shared.table, shared_gsq=shared.gsq,
+        pend_ids=ent.pend_ids[None], pend_grads=ent.pend_grads[None],
         step=state["step"] + 1,
     )
-    metrics = {
-        "loss": jax.lax.pmean(loss, machine_axis),
-        "pos_score": jax.lax.pmean(pos_m, machine_axis),
-        "neg_score": jax.lax.pmean(neg_m, machine_axis),
-    }
+    if "r_proj" in state:
+        out["r_proj"] = new_stores["proj"].table
+        out["proj_gsq"] = new_stores["proj"].gsq
     return out, metrics
 
 

@@ -18,7 +18,7 @@ evenly over the machine axis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -1,10 +1,14 @@
 """Single-machine KGE training (the paper's many-core path, minus Hogwild).
 
 This module is the reference implementation used by tests, benchmarks and the
-CPU-trainable examples. It already exercises T1/T2 (joint + in-batch negative
-sampling) and sparse Adagrad row updates; the mesh version in
-core/distributed.py adds T3/T4/T6 (METIS locality, relation partitioning,
-KVStore collectives) and T5 (deferred/overlapped entity updates).
+CPU-trainable examples. It exercises T1/T2 (joint + in-batch negative
+sampling) and — through ``DenseStore`` — sparse Adagrad row updates and the
+optional T5 deferred update (``init_state(..., overlap=True)``).
+
+The actual step logic lives in core/step.py (``store_train_step``), shared
+with the distributed path in core/distributed.py; this module only adapts the
+``KGEState`` container and the global-id batches of the single-machine
+samplers onto the EmbeddingStore surface.
 """
 
 from __future__ import annotations
@@ -15,18 +19,12 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.common.config import KGEConfig
-from repro.core import losses as L
-from repro.core import scores as S
 from repro.core.sampling import MODES, KGBatch
+from repro.core.step import store_train_step
+from repro.embeddings.store import DenseStore
 from repro.embeddings.table import emb_init_scale
-from repro.optim.sparse_adagrad import (
-    AdagradState,
-    segment_aggregate_rows,
-    sparse_adagrad_update_rows,
-)
 
 
 @jax.tree_util.register_dataclass
@@ -39,9 +37,17 @@ class KGEState:
     r_proj: Optional[jnp.ndarray]  # (n_relations, d*rel_dim) TransR/RESCAL
     proj_gsq: Optional[jnp.ndarray]
     step: jnp.ndarray
+    # T5 deferred-update buffers (overlap=True); None = immediate updates
+    pend_ids: Optional[jnp.ndarray] = None  # (Lp,) int32, -1 pad
+    pend_grads: Optional[jnp.ndarray] = None  # (Lp, d)
 
 
-def init_state(cfg: KGEConfig, key: jax.Array) -> KGEState:
+def ent_workspace_slots(cfg: KGEConfig) -> int:
+    """Entity rows touched by one joint batch: h + t + negatives."""
+    return 2 * cfg.batch_size + MODES * cfg.n_neg_groups * cfg.neg_sample_size
+
+
+def init_state(cfg: KGEConfig, key: jax.Array, overlap: bool = False) -> KGEState:
     s = emb_init_scale(cfg)
     k1, k2, k3 = jax.random.split(key, 3)
     ent = jax.random.uniform(k1, (cfg.n_entities, cfg.dim), jnp.float32, -s, s)
@@ -54,6 +60,11 @@ def init_state(cfg: KGEConfig, key: jax.Array) -> KGEState:
         if cfg.model == "transr":
             eye = jnp.eye(cfg.dim, cfg.rel_dim, dtype=jnp.float32).reshape(-1)
             proj = proj * 0.1 + eye
+    pend_ids = pend_grads = None
+    if overlap:
+        slots = ent_workspace_slots(cfg)
+        pend_ids = jnp.full((slots,), -1, jnp.int32)
+        pend_grads = jnp.zeros((slots, cfg.dim), jnp.float32)
     return KGEState(
         entity=ent,
         ent_gsq=jnp.zeros_like(ent),
@@ -62,63 +73,78 @@ def init_state(cfg: KGEConfig, key: jax.Array) -> KGEState:
         r_proj=proj,
         proj_gsq=None if proj is None else jnp.zeros_like(proj),
         step=jnp.zeros((), jnp.int32),
+        pend_ids=pend_ids,
+        pend_grads=pend_grads,
     )
 
 
-def _needs_proj(cfg: KGEConfig) -> bool:
-    return cfg.model in ("transr", "rescal")
+# --------------------------------------------------------------------------
+# KGEState <-> EmbeddingStore adapters
+# --------------------------------------------------------------------------
+def _empty(width: int):
+    return jnp.zeros((0,), jnp.int32), jnp.zeros((0, width), jnp.float32)
 
 
-def batch_scores(
-    cfg: KGEConfig,
-    h_rows: jnp.ndarray,  # (b, d)
-    r_rows: jnp.ndarray,  # (b, rel_dim)
-    t_rows: jnp.ndarray,  # (b, d)
-    neg_rows: jnp.ndarray,  # (MODES, ng, k, d)
-    proj_rows: Optional[jnp.ndarray] = None,  # (b, d*rel_dim)
-    ctx: S.ShardCtx = S.ShardCtx(None),
-    pairwise_fn=None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (pos_scores (b,), neg_scores (MODES, ng, gsz, k))."""
-    scale = emb_init_scale(cfg)
-    pos = S.positive_score(
-        cfg.model, h_rows, r_rows, t_rows, cfg.gamma, ctx,
-        r_proj=proj_rows, rel_dim=cfg.rel_dim, emb_scale=scale,
+def stores_from_state(cfg: KGEConfig, state: KGEState) -> Dict[str, DenseStore]:
+    """View the flat KGEState as DenseStores (zero-copy; arrays are shared)."""
+    defer = state.pend_ids is not None
+    pid, pg = ((state.pend_ids, state.pend_grads) if defer
+               else _empty(cfg.dim))
+    stores = {
+        "entity": DenseStore(state.entity, state.ent_gsq, pid, pg,
+                             lr=cfg.lr, defer=defer),
+        # relations are never deferred (paper: trainer-immediate)
+        "rel": DenseStore(state.r_emb, state.rel_gsq, *_empty(cfg.rel_dim),
+                          lr=cfg.lr, defer=False),
+    }
+    if state.r_proj is not None:
+        stores["proj"] = DenseStore(state.r_proj, state.proj_gsq,
+                                    *_empty(cfg.dim * cfg.rel_dim),
+                                    lr=cfg.lr, defer=False)
+    return stores
+
+
+def state_from_stores(state: KGEState, stores: Dict[str, DenseStore]) -> KGEState:
+    ent, rel = stores["entity"], stores["rel"]
+    proj = stores.get("proj")
+    defer = state.pend_ids is not None
+    return dataclasses.replace(
+        state,
+        entity=ent.table, ent_gsq=ent.gsq,
+        r_emb=rel.table, rel_gsq=rel.gsq,
+        r_proj=None if proj is None else proj.table,
+        proj_gsq=None if proj is None else proj.gsq,
+        step=state.step + 1,
+        pend_ids=ent.pend_ids if defer else None,
+        pend_grads=ent.pend_grads if defer else None,
     )
-    ng = neg_rows.shape[1]
-    b = h_rows.shape[0]
-    gsz = b // ng
-
-    def per_group(e, r, negs, pr):
-        return S.negative_score(
-            cfg.model, e, r, negs, corrupt, cfg.gamma, ctx,
-            r_proj=pr, rel_dim=cfg.rel_dim, emb_scale=scale,
-            pairwise_fn=pairwise_fn,
-        )
-
-    neg_out = []
-    for m in range(MODES):
-        corrupt = "tail" if m == 0 else "head"
-        e = (h_rows if m == 0 else t_rows).reshape(ng, gsz, -1)
-        r = r_rows.reshape(ng, gsz, -1)
-        pr = None if proj_rows is None else proj_rows.reshape(ng, gsz, -1)
-        negs = neg_rows[m]  # (ng, k, d)
-        f = jax.vmap(per_group, in_axes=(0, 0, 0, None if pr is None else 0))
-        neg_out.append(f(e, r, negs, pr))  # (ng, gsz, k)
-    return pos, jnp.stack(neg_out)
 
 
-def loss_on_rows(cfg, h_rows, r_rows, t_rows, neg_rows, proj_rows=None,
-                 ctx=S.ShardCtx(None), pairwise_fn=None):
-    pos, neg = batch_scores(cfg, h_rows, r_rows, t_rows, neg_rows, proj_rows,
-                            ctx, pairwise_fn)
-    b = h_rows.shape[0]
-    negf = neg.reshape(MODES * b, -1)  # pair each positive w/ its group negs
-    posf = jnp.concatenate([pos, pos])
-    loss = L.kge_loss(cfg.loss, posf, negf, margin=cfg.gamma)
-    return loss, (pos, neg)
+def dense_step_batch(batch: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Lower a global-id batch (h, r, t, neg) to the step's workspace form."""
+    h, r, t, neg = batch["h"], batch["r"], batch["t"], batch["neg"]
+    b = h.shape[0]
+    return {
+        "ent_ids": jnp.concatenate([h, t, neg.reshape(-1)]).astype(jnp.int32),
+        "rel_ids": r.astype(jnp.int32),
+        "h_slot": jnp.arange(b, dtype=jnp.int32),
+        "t_slot": b + jnp.arange(b, dtype=jnp.int32),
+        "neg_slot": 2 * b + jnp.arange(neg.size, dtype=jnp.int32).reshape(neg.shape),
+        "rel_slot": jnp.arange(b, dtype=jnp.int32),
+    }
 
 
+def flush_state(cfg: KGEConfig, state: KGEState) -> KGEState:
+    """Apply any pending (deferred) entity update — call before eval/save."""
+    if state.pend_ids is None:
+        return state
+    ent = DenseStore(state.entity, state.ent_gsq, state.pend_ids,
+                     state.pend_grads, lr=cfg.lr, defer=True).flush()
+    return dataclasses.replace(state, entity=ent.table, ent_gsq=ent.gsq,
+                               pend_ids=ent.pend_ids, pend_grads=ent.pend_grads)
+
+
+# --------------------------------------------------------------------------
 def train_step(
     cfg: KGEConfig,
     state: KGEState,
@@ -129,58 +155,10 @@ def train_step(
 
     batch: h, r, t (b,), neg (MODES, ng, k).
     """
-    h_ids, r_ids, t_ids, neg_ids = batch["h"], batch["r"], batch["t"], batch["neg"]
-    h_rows = state.entity[h_ids]
-    t_rows = state.entity[t_ids]
-    r_rows = state.r_emb[r_ids]
-    neg_rows = state.entity[neg_ids]
-    proj_rows = None if state.r_proj is None else state.r_proj[r_ids]
-
-    def f(hr, tr, rr, nr, pr):
-        return loss_on_rows(cfg, hr, rr, tr, nr, pr, pairwise_fn=pairwise_fn)
-
-    grad_fn = jax.value_and_grad(f, argnums=(0, 1, 2, 3) + ((4,) if proj_rows is not None else ()),
-                                 has_aux=True)
-    (loss, (pos, neg)), grads = grad_fn(h_rows, t_rows, r_rows, neg_rows, proj_rows)
-    gh, gt, gr, gn = grads[:4]
-
-    # ---- sparse Adagrad on entity rows (dedup + aggregate first)
-    ent_ids = jnp.concatenate([h_ids, t_ids, neg_ids.reshape(-1)]).astype(jnp.int32)
-    ent_grads = jnp.concatenate([gh, gt, gn.reshape(-1, cfg.dim)])
-    uid, agg = segment_aggregate_rows(ent_ids, ent_grads, cfg.n_entities)
-    new_ent, ent_state = sparse_adagrad_update_rows(
-        state.entity, AdagradState(state.ent_gsq), uid, agg, cfg.lr
-    )
-
-    # ---- relations
-    rid, ragg = segment_aggregate_rows(r_ids.astype(jnp.int32), gr, cfg.n_relations)
-    new_rel, rel_state = sparse_adagrad_update_rows(
-        state.r_emb, AdagradState(state.rel_gsq), rid, ragg, cfg.lr
-    )
-    new_proj, proj_gsq = state.r_proj, state.proj_gsq
-    if proj_rows is not None:
-        gp = grads[4]
-        pid, pagg = segment_aggregate_rows(r_ids.astype(jnp.int32), gp, cfg.n_relations)
-        new_proj, pstate = sparse_adagrad_update_rows(
-            state.r_proj, AdagradState(state.proj_gsq), pid, pagg, cfg.lr
-        )
-        proj_gsq = pstate.gsq
-
-    new_state = KGEState(
-        entity=new_ent,
-        ent_gsq=ent_state.gsq,
-        r_emb=new_rel,
-        rel_gsq=rel_state.gsq,
-        r_proj=new_proj,
-        proj_gsq=proj_gsq,
-        step=state.step + 1,
-    )
-    metrics = {
-        "loss": loss,
-        "pos_score": jnp.mean(pos),
-        "neg_score": jnp.mean(neg),
-    }
-    return new_state, metrics
+    stores, metrics = store_train_step(
+        cfg, stores_from_state(cfg, state), dense_step_batch(batch),
+        pairwise_fn=pairwise_fn)
+    return state_from_stores(state, stores), metrics
 
 
 def make_train_step(cfg: KGEConfig, pairwise_fn=None):
@@ -199,53 +177,13 @@ def batch_to_device(batch: KGBatch) -> Dict[str, jnp.ndarray]:
 # --------------------------------------------------------------------------
 # Naive baseline step: independent negatives per triplet (paper's strawman).
 # Memory/compute O(b*k*d) — used by benchmarks/bench_negative_sampling.py.
+# Same stores, same update path; only the negative layout differs.
 # --------------------------------------------------------------------------
 def naive_train_step(cfg: KGEConfig, state: KGEState, batch):
-    h_ids, r_ids, t_ids, neg_ids = batch["h"], batch["r"], batch["t"], batch["neg"]
-    scale = emb_init_scale(cfg)
-    ctx = S.ShardCtx(None)
-
-    def f(hr, tr, rr, nr):
-        pos = S.positive_score(cfg.model, hr, rr, tr, cfg.gamma, ctx, emb_scale=scale)
-        outs = []
-        for m in range(MODES):
-            corrupt = "tail" if m == 0 else "head"
-            e = hr if m == 0 else tr
-            o = S.neg_o(cfg.model, e, rr, corrupt, ctx, emb_scale=scale)
-            mode = S.PAIRWISE_OF[cfg.model]
-            if mode == "dot":
-                part = jnp.einsum("bd,bkd->bk", o, nr[m])
-            elif mode == "l2sq":
-                part = jnp.sum(jnp.square(o[:, None, :] - nr[m]), axis=-1)
-            else:
-                part = jnp.sum(jnp.abs(o[:, None, :] - nr[m]), axis=-1)
-            outs.append(S.finish_neg_scores(cfg.model, part, cfg.gamma, ctx))
-        neg = jnp.stack(outs)  # (MODES, b, k)
-        loss = L.kge_loss(cfg.loss, jnp.concatenate([pos, pos]),
-                          neg.reshape(2 * hr.shape[0], -1), margin=cfg.gamma)
-        return loss
-
-    h_rows, t_rows = state.entity[h_ids], state.entity[t_ids]
-    r_rows, neg_rows = state.r_emb[r_ids], state.entity[neg_ids]
-    loss, grads = jax.value_and_grad(f, argnums=(0, 1, 2, 3))(
-        h_rows, t_rows, r_rows, neg_rows
-    )
-    gh, gt, gr, gn = grads
-    ent_ids = jnp.concatenate([h_ids, t_ids, neg_ids.reshape(-1)]).astype(jnp.int32)
-    ent_grads = jnp.concatenate([gh, gt, gn.reshape(-1, cfg.dim)])
-    uid, agg = segment_aggregate_rows(ent_ids, ent_grads, cfg.n_entities)
-    new_ent, ent_state = sparse_adagrad_update_rows(
-        state.entity, AdagradState(state.ent_gsq), uid, agg, cfg.lr
-    )
-    rid, ragg = segment_aggregate_rows(r_ids.astype(jnp.int32), gr, cfg.n_relations)
-    new_rel, rel_state = sparse_adagrad_update_rows(
-        state.r_emb, AdagradState(state.rel_gsq), rid, ragg, cfg.lr
-    )
-    return dataclasses.replace(
-        state,
-        entity=new_ent,
-        ent_gsq=ent_state.gsq,
-        r_emb=new_rel,
-        rel_gsq=rel_state.gsq,
-        step=state.step + 1,
-    ), {"loss": loss}
+    if state.pend_ids is not None:
+        raise ValueError("naive_train_step does not support overlap (T5) "
+                         "state; init_state(..., overlap=False)")
+    stores, metrics = store_train_step(
+        cfg, stores_from_state(cfg, state), dense_step_batch(batch),
+        neg_mode="naive")
+    return state_from_stores(state, stores), metrics

@@ -1,0 +1,182 @@
+"""The one KGE train step, parameterized by EmbeddingStores.
+
+Every trainer in the repo — single-machine joint/naive and the shard_map
+cluster path — is this function applied to different store backends:
+
+    single machine   stores = DenseStore(entity/rel[/proj])
+    distributed      stores = ShardedStore(entity/rel[/proj]) +
+                              ReplicatedStore(shared split relations),
+                     called per-device inside compat.shard_map
+
+The step follows the paper's update discipline (§2, §3.4, T5):
+
+  1. ``flush()`` the entity store — applies the previous step's deferred
+     gradients (overlap on) or is a no-op (overlap off);
+  2. ``gather()`` the workspace rows (post-update — see core/distributed.py
+     for why we read fresh rows rather than literal paper staleness);
+  3. score + loss + grads w.r.t. the *workspace rows only* (sparse);
+  4. ``apply_sparse_grads()`` on every touched table — the stores decide
+     whether to apply now or defer, and where rows physically live.
+
+Batch normal form (what both samplers lower to):
+
+    ent_ids   store-address of the entity workspace (array / ShardedIds)
+    rel_ids   store-address of the relation workspace
+    h_slot, t_slot   (b,)  workspace slots of heads / tails
+    neg_slot  (MODES, ng, k) joint  |  (MODES, b, k) naive — workspace slots
+    rel_slot  (b,)  relation-workspace slots
+    rel_shared (b,) optional: row in the shared relation table, -1 = owned
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import KGEConfig
+from repro.core import losses as L
+from repro.core import scores as S
+from repro.core.sampling import MODES
+from repro.embeddings.table import emb_init_scale
+
+Stores = Dict[str, object]  # "entity", "rel", optional "proj", "shared"
+
+
+def store_train_step(
+    cfg: KGEConfig,
+    stores: Stores,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    neg_mode: str = "joint",
+    ctx: Optional[S.ShardCtx] = None,
+    n_servers: int = 1,
+    machine_axis=None,
+    pairwise_fn=None,
+) -> Tuple[Stores, Dict[str, jnp.ndarray]]:
+    """One sparse mini-batch step over pluggable stores (jit/shard_map-able)."""
+    ctx = S.ShardCtx(None) if ctx is None else ctx
+    scale = emb_init_scale(cfg)
+    h_slot, t_slot = batch["h_slot"], batch["t_slot"]
+    rel_slot, neg_slot = batch["rel_slot"], batch["neg_slot"]
+    rel_shared = batch.get("rel_shared")
+    has_shared = "shared" in stores and rel_shared is not None
+    has_proj = "proj" in stores
+
+    # ---- 1+2. flush deferred updates, then pull the workspaces
+    ent = stores["entity"].flush()
+    ws = ent.gather(batch["ent_ids"])
+    rel_store = stores["rel"]
+    rel_ws = rel_store.gather(batch["rel_ids"])
+    proj_ws = stores["proj"].gather(batch["rel_ids"]) if has_proj else None
+    shared_rows = stores["shared"].gather(rel_shared) if has_shared else None
+    is_shared = (rel_shared >= 0)[:, None] if has_shared else None
+
+    b = h_slot.shape[0]
+    k = cfg.neg_sample_size
+    ng = cfg.n_neg_groups
+    # negative-sharding (EXPERIMENTS.md §Perf hillclimb 3): local (b, k/S)
+    # score slices + scalar loss psum, instead of psum-ing (b, k) scores.
+    sharded_negs = (
+        neg_mode == "joint"
+        and ctx.axis is not None
+        and cfg.model not in ("transr", "rescal")
+        and cfg.loss in ("logistic", "ranking")
+        and k % n_servers == 0
+    )
+
+    # ---- 3. loss + grads w.r.t. workspace rows ONLY (sparse, paper §2)
+    def loss_fn(ws_, rel_ws_, shared_rows_, proj_ws_):
+        h, t = ws_[h_slot], ws_[t_slot]
+        r = rel_ws_[rel_slot]
+        if is_shared is not None:
+            r = jnp.where(is_shared, shared_rows_, r)
+        pr = None if proj_ws_ is None else proj_ws_[rel_slot]
+        pos = S.positive_score(cfg.model, h, r, t, cfg.gamma, ctx,
+                               r_proj=pr, rel_dim=cfg.rel_dim, emb_scale=scale)
+
+        if neg_mode == "naive":
+            # independent negatives per triplet — the paper's O(b·k·d) strawman
+            outs = []
+            for m in range(MODES):
+                corrupt = "tail" if m == 0 else "head"
+                e = h if m == 0 else t
+                o = S.neg_o(cfg.model, e, r, corrupt, ctx, emb_scale=scale)
+                negs = ws_[neg_slot[m]]  # (b, k, d)
+                mode = S.PAIRWISE_OF[cfg.model]
+                if mode == "dot":
+                    part = jnp.einsum("bd,bkd->bk", o, negs)
+                elif mode == "l2sq":
+                    part = jnp.sum(jnp.square(o[:, None, :] - negs), axis=-1)
+                else:
+                    part = jnp.sum(jnp.abs(o[:, None, :] - negs), axis=-1)
+                outs.append(S.finish_neg_scores(cfg.model, part, cfg.gamma, ctx))
+            neg = jnp.stack(outs)  # (MODES, b, k)
+            loss = L.kge_loss(cfg.loss, jnp.concatenate([pos, pos]),
+                              neg.reshape(MODES * b, -1), margin=cfg.gamma)
+            return loss, (jnp.mean(pos), jnp.mean(neg))
+
+        # joint negatives (T1): one pool of k entities per group of gsz triplets
+        gsz = b // ng
+        neg_out = []
+        for m in range(MODES):
+            corrupt = "tail" if m == 0 else "head"
+            e = (h if m == 0 else t).reshape(ng, gsz, -1)
+            rg = r.reshape(ng, gsz, -1)
+            prg = None if pr is None else pr.reshape(ng, gsz, -1)
+            negs = ws_[neg_slot[m]]  # (ng, k, d)
+            if sharded_negs:
+                f = jax.vmap(lambda e1, r1, n1: S.negative_score_sharded(
+                    cfg.model, e1, r1, n1, corrupt, cfg.gamma, ctx,
+                    emb_scale=scale, pairwise_fn=pairwise_fn,
+                    wire_dtype=cfg.comm_dtype))
+                neg_out.append(f(e, rg, negs))  # (ng, gsz, k/S) local
+            else:
+                f = jax.vmap(lambda e1, r1, n1, p1=prg: S.negative_score(
+                    cfg.model, e1, r1, n1, corrupt, cfg.gamma, ctx,
+                    r_proj=None if prg is None else p1, rel_dim=cfg.rel_dim,
+                    emb_scale=scale, pairwise_fn=pairwise_fn),
+                    in_axes=(0, 0, 0) if prg is None else (0, 0, 0, 0))
+                neg_out.append(f(e, rg, negs) if prg is None
+                               else f(e, rg, negs, prg))
+        neg = jnp.stack(neg_out)  # (MODES, ng, gsz, k or k/S)
+        if sharded_negs:
+            # scalar-reduced loss: identical value on every server
+            posf = jnp.concatenate([pos, pos])
+            if cfg.loss == "logistic":
+                neg_sum = jax.lax.psum(jnp.sum(jax.nn.softplus(neg)), ctx.axis)
+                loss = (jnp.mean(jax.nn.softplus(-posf))
+                        + neg_sum / (MODES * b * k))
+            else:  # ranking: pair each positive with its group's negatives
+                p2 = jnp.stack([pos, pos]).reshape(MODES, ng, gsz, 1)
+                h_ = jnp.maximum(0.0, cfg.gamma - p2 + neg)
+                loss = jax.lax.psum(jnp.sum(h_), ctx.axis) / (MODES * b * k)
+            neg_mean = jax.lax.psum(jnp.sum(neg), ctx.axis) / (MODES * b * k)
+            return loss, (jnp.mean(pos), neg_mean)
+        loss = L.kge_loss(cfg.loss, jnp.concatenate([pos, pos]),
+                          neg.reshape(MODES * b, -1), margin=cfg.gamma)
+        return loss, (jnp.mean(pos), jnp.mean(neg))
+
+    argnums = [0, 1] + ([2] if has_shared else []) + ([3] if has_proj else [])
+    (loss, (pos_m, neg_m)), grads = jax.value_and_grad(
+        loss_fn, argnums=tuple(argnums), has_aux=True
+    )(ws, rel_ws, shared_rows, proj_ws)
+    gmap = dict(zip(argnums, grads))
+
+    # ---- 4. every row update goes through EmbeddingStore.apply_sparse_grads
+    new_stores = dict(stores)
+    new_stores["entity"] = ent.apply_sparse_grads(batch["ent_ids"], gmap[0])
+    new_stores["rel"] = rel_store.apply_sparse_grads(batch["rel_ids"], gmap[1])
+    if has_shared:
+        new_stores["shared"] = stores["shared"].apply_sparse_grads(
+            rel_shared, gmap[2])
+    if has_proj:
+        new_stores["proj"] = stores["proj"].apply_sparse_grads(
+            batch["rel_ids"], gmap[3])
+
+    metrics = {"loss": loss, "pos_score": pos_m, "neg_score": neg_m}
+    if machine_axis is not None:
+        metrics = {name: jax.lax.pmean(v, machine_axis)
+                   for name, v in metrics.items()}
+    return new_stores, metrics

@@ -19,7 +19,6 @@ Dataset-scale presets mirror the paper's Table 3 row shapes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import numpy as np
 

@@ -11,7 +11,7 @@ import queue
 import threading
 import time
 import warnings
-from typing import Callable, Iterator, Optional
+from typing import Callable, Iterator
 
 
 class Prefetcher:

@@ -5,6 +5,13 @@ from repro.embeddings.kvstore import (
     pull_remote,
     push_remote_grads,
 )
+from repro.embeddings.store import (
+    DenseStore,
+    EmbeddingStore,
+    ReplicatedStore,
+    ShardedIds,
+    ShardedStore,
+)
 
 __all__ = [
     "EmbeddingTable",
@@ -14,4 +21,9 @@ __all__ = [
     "pull_local",
     "pull_remote",
     "push_remote_grads",
+    "EmbeddingStore",
+    "DenseStore",
+    "ShardedIds",
+    "ShardedStore",
+    "ReplicatedStore",
 ]

@@ -30,12 +30,17 @@ import jax.numpy as jnp
 
 from repro.common import compat
 
-AxisName = Union[str, Tuple[str, ...]]
+AxisName = Union[str, Tuple[str, ...], None]
 
 
 @dataclasses.dataclass(frozen=True)
 class KVStoreSpec:
-    machine_axis: AxisName  # 'data' or ('pod', 'data')
+    # 'data' or ('pod', 'data') inside shard_map; None = the degenerate
+    # single-machine KVStore (n_parts == 1): every "remote" request is served
+    # from the local block and no collective runs, so the same pull/push code
+    # works outside any mesh. This is what the single↔distributed parity
+    # tests rely on.
+    machine_axis: AxisName
     n_parts: int  # number of machines (= product of machine axis sizes)
     remote_capacity: int  # R, total remote rows per machine per step
     # wire format for remote rows/grads: bf16 halves ICI bytes (rows are
@@ -75,6 +80,10 @@ def pull_remote(
     returns: (n_parts * Rp, d_shard) the fetched rows, zeros at pads.
     """
     ax = spec.machine_axis
+    if ax is None:
+        # degenerate single-machine KVStore: the only peer is ourselves
+        rows = spec.wire(_gather_rows(block, req))
+        return rows.reshape(-1, rows.shape[-1]).astype(block.dtype)
     # route requests to owners: after a2a, recv[p] = ids peer p asked us for
     recv = compat.all_to_all(req, ax, split_axis=0, concat_axis=0, tiled=True)
     served = spec.wire(_gather_rows(block, recv))  # (n_parts, Rp, d_shard)
@@ -96,6 +105,10 @@ def push_remote_grads(
              matching gradient rows. Apply with sparse Adagrad.
     """
     ax = spec.machine_axis
+    if ax is None:
+        # degenerate single-machine KVStore: grads already sit on the owner
+        g = spec.wire(grads).astype(grads.dtype)
+        return req.reshape(-1), g.reshape(-1, grads.shape[-1])
     g = spec.wire(grads).reshape(req.shape[0], -1, grads.shape[-1])
     recv_ids = compat.all_to_all(req, ax, split_axis=0, concat_axis=0, tiled=True)
     recv_grads = compat.all_to_all(g, ax, split_axis=0, concat_axis=0, tiled=True)

@@ -1,0 +1,272 @@
+"""Pluggable embedding stores — the single update surface of the trainer.
+
+DGL-KE's core architectural claim is that one embedding-access abstraction
+(sparse Adagrad row updates behind a KVStore) serves every deployment from a
+single many-core machine to a cluster. This module is that abstraction for
+the JAX reproduction: every train step gathers rows and applies sparse
+gradients through an ``EmbeddingStore`` and never touches tables directly.
+
+Three backends:
+
+* ``DenseStore``    — one whole table on the local device(s); the
+  single-machine path (paper's many-core trainer). Supports the T5 deferred
+  ("overlapped") update via its pending buffers, so overlap is no longer a
+  distributed-only feature.
+* ``ShardedStore``  — a machine-local block of a row-partitioned table plus
+  the KVStore pull/push collectives (embeddings/kvstore.py). Runs inside
+  ``compat.shard_map``; with ``machine_axis=None`` (n_parts == 1) the
+  collectives degrade to local gathers and the store runs anywhere — that
+  degenerate mode is what the single↔distributed parity tests exercise.
+* ``ReplicatedStore`` — a small table replicated over machines (the "shared"
+  split relations of T4), updated by scatter + psum.
+
+All stores are functional pytrees: ``apply_sparse_grads``/``flush`` return a
+new store. The persistence surface is ``snapshot()`` (a flat dict of arrays,
+checkpointable with common/checkpoint.py) and ``restore(snapshot)``.
+
+Update semantics shared by all backends (paper §3.4 + T5):
+
+    store = store.flush()                      # apply last step's deferred grads
+    rows  = store.gather(ids)                  # read post-update rows
+    ...compute grads w.r.t. rows...
+    store = store.apply_sparse_grads(ids, g)   # apply now, or defer if overlap
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.embeddings.kvstore import (
+    KVStoreSpec,
+    pull_local,
+    pull_remote,
+    push_remote_grads,
+)
+from repro.optim.sparse_adagrad import (
+    AdagradState,
+    segment_aggregate_rows,
+    sparse_adagrad_update_rows,
+)
+
+Snapshot = Dict[str, jnp.ndarray]
+
+
+@runtime_checkable
+class EmbeddingStore(Protocol):
+    """What a train step may do with an embedding table."""
+
+    def gather(self, ids) -> jnp.ndarray: ...
+
+    def apply_sparse_grads(self, ids, grads) -> "EmbeddingStore": ...
+
+    def flush(self) -> "EmbeddingStore": ...
+
+    def snapshot(self) -> Snapshot: ...
+
+    def restore(self, snap: Snapshot) -> "EmbeddingStore": ...
+
+
+def _empty_pending(width: int, slots: int = 0, dtype=jnp.float32):
+    return (jnp.full((slots,), -1, jnp.int32), jnp.zeros((slots, width), dtype))
+
+
+def _adagrad_rows(table, gsq, ids, grads, lr):
+    """Aggregate duplicate ids, then sparse-Adagrad the touched rows."""
+    uid, agg = segment_aggregate_rows(ids.astype(jnp.int32), grads, ids.shape[0])
+    new_table, st = sparse_adagrad_update_rows(table, AdagradState(gsq), uid, agg, lr)
+    return new_table, st.gsq
+
+
+# ===========================================================================
+@dataclasses.dataclass
+class DenseStore:
+    """Whole-table store (single-machine path). ``ids`` are global rows.
+
+    ``defer=True`` holds each step's aggregate gradient in the pending
+    buffers and applies it at the *next* step's ``flush()`` — the paper's T5
+    overlap, previously exclusive to the distributed path.
+    """
+
+    table: jnp.ndarray  # (n_rows, d)
+    gsq: jnp.ndarray  # Adagrad accumulator, same shape
+    pend_ids: jnp.ndarray  # (Lp,) int32, -1 pad; (0,) when defer off
+    pend_grads: jnp.ndarray  # (Lp, d)
+    lr: float = 0.1  # static
+    defer: bool = False  # static
+
+    @classmethod
+    def create(cls, table: jnp.ndarray, lr: float, defer: bool = False,
+               pend_slots: int = 0) -> "DenseStore":
+        pid, pg = _empty_pending(table.shape[-1], pend_slots if defer else 0,
+                                 table.dtype)
+        return cls(table=table, gsq=jnp.zeros_like(table), pend_ids=pid,
+                   pend_grads=pg, lr=lr, defer=defer)
+
+    def gather(self, ids: jnp.ndarray) -> jnp.ndarray:
+        return self.table[ids]
+
+    def apply_sparse_grads(self, ids, grads) -> "DenseStore":
+        if self.defer:
+            # T5: park this step's grads; flush() applies them next step
+            return dataclasses.replace(
+                self, pend_ids=ids.astype(jnp.int32), pend_grads=grads)
+        table, gsq = _adagrad_rows(self.table, self.gsq, ids, grads, self.lr)
+        return dataclasses.replace(self, table=table, gsq=gsq)
+
+    def flush(self) -> "DenseStore":
+        if self.pend_ids.shape[0] == 0:
+            return self
+        table, gsq = _adagrad_rows(self.table, self.gsq, self.pend_ids,
+                                   self.pend_grads, self.lr)
+        pid, pg = (jnp.full_like(self.pend_ids, -1),
+                   jnp.zeros_like(self.pend_grads))
+        return dataclasses.replace(self, table=table, gsq=gsq,
+                                   pend_ids=pid, pend_grads=pg)
+
+    def snapshot(self) -> Snapshot:
+        return {"table": self.table, "gsq": self.gsq,
+                "pend_ids": self.pend_ids, "pend_grads": self.pend_grads}
+
+    def restore(self, snap: Snapshot) -> "DenseStore":
+        return dataclasses.replace(self, **snap)
+
+
+jax.tree_util.register_dataclass(
+    DenseStore,
+    data_fields=["table", "gsq", "pend_ids", "pend_grads"],
+    meta_fields=["lr", "defer"],
+)
+
+
+# ===========================================================================
+class ShardedIds(NamedTuple):
+    """Addresses for one machine's pull: block-local rows + per-peer requests."""
+
+    local: jnp.ndarray  # (L,) machine-local row ids, -1 pad
+    remote: jnp.ndarray  # (n_parts, Rp) peer-local row ids, -1 pad
+
+
+@dataclasses.dataclass
+class ShardedStore:
+    """Partition-local block of a row-sharded table + KVStore collectives.
+
+    Inside ``compat.shard_map`` the collectives run over ``spec.machine_axis``;
+    with ``machine_axis=None`` (the n_parts == 1 degenerate KVStore) remote
+    requests are served from the local block and the store needs no mesh.
+    """
+
+    table: jnp.ndarray  # (rows_local, d or d_shard)
+    gsq: jnp.ndarray
+    pend_ids: jnp.ndarray  # (Lp,) -1 pad; (0,) when defer off
+    pend_grads: jnp.ndarray  # (Lp, d_shard)
+    spec: KVStoreSpec = KVStoreSpec(None, 1, 1)  # static
+    lr: float = 0.1  # static
+    defer: bool = False  # static
+
+    @classmethod
+    def create(cls, table: jnp.ndarray, spec: KVStoreSpec, lr: float,
+               defer: bool = False, pend_slots: int = 0) -> "ShardedStore":
+        pid, pg = _empty_pending(table.shape[-1], pend_slots if defer else 0,
+                                 table.dtype)
+        return cls(table=table, gsq=jnp.zeros_like(table), pend_ids=pid,
+                   pend_grads=pg, spec=spec, lr=lr, defer=defer)
+
+    def gather(self, ids: ShardedIds) -> jnp.ndarray:
+        """Workspace = [local rows (L,); remote rows (n_parts * Rp,)]."""
+        loc = pull_local(self.table, ids.local)
+        rem = pull_remote(self.table, ids.remote, self.spec)
+        return jnp.concatenate([loc, rem], axis=0)
+
+    def apply_sparse_grads(self, ids: ShardedIds, grads) -> "ShardedStore":
+        """``grads`` covers the whole workspace returned by ``gather``."""
+        L = ids.local.shape[0]
+        g_local, g_remote = grads[:L], grads[L:]
+        owner_ids, owner_grads = push_remote_grads(g_remote, ids.remote, self.spec)
+        all_ids = jnp.concatenate([ids.local, owner_ids]).astype(jnp.int32)
+        all_grads = jnp.concatenate([g_local, owner_grads], axis=0)
+        if self.defer:
+            return dataclasses.replace(self, pend_ids=all_ids,
+                                       pend_grads=all_grads)
+        table, gsq = _adagrad_rows(self.table, self.gsq, all_ids, all_grads,
+                                   self.lr)
+        return dataclasses.replace(self, table=table, gsq=gsq)
+
+    def flush(self) -> "ShardedStore":
+        if self.pend_ids.shape[0] == 0:
+            return self
+        table, gsq = _adagrad_rows(self.table, self.gsq, self.pend_ids,
+                                   self.pend_grads, self.lr)
+        pid, pg = (jnp.full_like(self.pend_ids, -1),
+                   jnp.zeros_like(self.pend_grads))
+        return dataclasses.replace(self, table=table, gsq=gsq,
+                                   pend_ids=pid, pend_grads=pg)
+
+    def snapshot(self) -> Snapshot:
+        return {"table": self.table, "gsq": self.gsq,
+                "pend_ids": self.pend_ids, "pend_grads": self.pend_grads}
+
+    def restore(self, snap: Snapshot) -> "ShardedStore":
+        return dataclasses.replace(self, **snap)
+
+
+jax.tree_util.register_dataclass(
+    ShardedStore,
+    data_fields=["table", "gsq", "pend_ids", "pend_grads"],
+    meta_fields=["spec", "lr", "defer"],
+)
+
+
+# ===========================================================================
+@dataclasses.dataclass
+class ReplicatedStore:
+    """Small machine-replicated table (T4 "shared" split relations).
+
+    Gradients are scattered into a full-table buffer and psum'd over the
+    machine axis, so every replica applies the identical Adagrad step.
+    """
+
+    table: jnp.ndarray  # (n_rows, d)
+    gsq: jnp.ndarray
+    lr: float = 0.1  # static
+    machine_axis: object = None  # static: None | str | tuple of str
+    eps: float = 1e-10  # static
+
+    @classmethod
+    def create(cls, table: jnp.ndarray, lr: float,
+               machine_axis=None) -> "ReplicatedStore":
+        return cls(table=table, gsq=jnp.zeros_like(table), lr=lr,
+                   machine_axis=machine_axis)
+
+    def gather(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """Rows for ids; -1 pads return row 0 (callers mask)."""
+        return self.table[jnp.maximum(ids, 0)]
+
+    def apply_sparse_grads(self, ids, grads) -> "ReplicatedStore":
+        mask = (ids >= 0).reshape(ids.shape + (1,) * (grads.ndim - ids.ndim))
+        g = jnp.zeros_like(self.table).at[jnp.maximum(ids, 0)].add(
+            jnp.where(mask, grads, 0.0))
+        if self.machine_axis is not None:
+            g = jax.lax.psum(g, self.machine_axis)
+        gsq = self.gsq + jnp.square(g)
+        table = self.table - self.lr * g / (jnp.sqrt(gsq) + self.eps)
+        return dataclasses.replace(self, table=table, gsq=gsq)
+
+    def flush(self) -> "ReplicatedStore":
+        return self
+
+    def snapshot(self) -> Snapshot:
+        return {"table": self.table, "gsq": self.gsq}
+
+    def restore(self, snap: Snapshot) -> "ReplicatedStore":
+        return dataclasses.replace(self, **snap)
+
+
+jax.tree_util.register_dataclass(
+    ReplicatedStore,
+    data_fields=["table", "gsq"],
+    meta_fields=["lr", "machine_axis", "eps"],
+)

@@ -21,7 +21,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.common import compat
 from repro.common.config import INPUT_SHAPES

@@ -1,0 +1,185 @@
+"""One step-loop for every driver — train, serve, examples, benchmarks.
+
+The paper's trainers differ only in how a batch is made and how state is
+stepped; the loop around them (prefetch, logging, checkpointing, eval) is
+identical. This module is that loop, with behavior injected as hooks:
+
+    state = train_loop(step_fn, state, make_batch, n_steps,
+                       hooks=[LoggingHook(...), CheckpointHook(...)])
+
+``make_batch() -> (batch, stats)`` runs in the Prefetcher's producer thread
+(overlapping host-side sampling with device compute, paper T5's cheap half);
+``step_fn(state, batch) -> (state, metrics)`` is any jitted step —
+single-machine ``train_step``, the shard_map distributed step, or a decode
+step via ``run_loop``.
+
+Hooks see every step *after* it is issued: ``on_step(i, state, metrics,
+stats)`` with ``i`` the 1-based step number, then ``on_end(i, state)`` once.
+``on_end`` may return a replacement state (e.g. a flushed one); ``None``
+keeps the current state.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Sequence
+
+from repro.data.pipeline import Prefetcher
+
+
+class Hook:
+    """Base hook: all callbacks optional no-ops."""
+
+    def on_step(self, i: int, state, metrics, stats) -> None:
+        pass
+
+    def on_end(self, i: int, state):
+        return None
+
+
+class LoggingHook(Hook):
+    """Periodic loss/throughput lines (and drop-rate when stats carry it)."""
+
+    def __init__(self, log_every: int = 100, batch_size: int = 0,
+                 start: int = 0, print_fn: Callable[[str], None] = print):
+        self.log_every = max(1, log_every)
+        self.batch_size = batch_size
+        self.start = start
+        self.print_fn = print_fn
+        self.t0 = None
+        self.drops = 0
+        self.saw_drops = False
+
+    def on_step(self, i, state, metrics, stats):
+        if self.t0 is None:
+            self.t0 = time.time()
+        if stats and "dropped" in stats:
+            self.saw_drops = True
+            self.drops += stats["dropped"]
+        if i % self.log_every:
+            return
+        done = i - self.start
+        dt = max(time.time() - self.t0, 1e-9)
+        line = f"step {i:6d} loss {float(metrics['loss']):8.4f} ({done/dt:6.1f} steps/s"
+        if self.batch_size:
+            line += f", {done*self.batch_size/dt:9.0f} triplets/s"
+            if self.saw_drops:
+                line += f", drop {self.drops/(done*self.batch_size):.2%}"
+        self.print_fn(line + ")")
+
+
+class CheckpointHook(Hook):
+    """Periodic saves; the final save is skipped if the last periodic save
+    already covers the final step (no redundant duplicate checkpoint).
+
+    ``flush_fn`` (e.g. ``kge_model.flush_state``) is applied before each
+    save so deferred (T5) gradients land in the checkpoint.
+    """
+
+    def __init__(self, ckpt_dir: str, save_every: int = 0,
+                 flush_fn: Optional[Callable] = None, save_fn=None):
+        if save_fn is None:
+            from repro.common.checkpoint import save_checkpoint
+
+            save_fn = save_checkpoint
+        self.ckpt_dir = ckpt_dir
+        self.save_every = save_every
+        self.flush_fn = flush_fn
+        self.save_fn = save_fn
+        self.last_saved = -1
+
+    def _save(self, i, state):
+        if self.flush_fn is not None:
+            state = self.flush_fn(state)
+        self.save_fn(self.ckpt_dir, i, state)
+        self.last_saved = i
+
+    def on_step(self, i, state, metrics, stats):
+        if self.ckpt_dir and self.save_every and i % self.save_every == 0:
+            self._save(i, state)
+
+    def on_end(self, i, state):
+        if self.ckpt_dir and self.last_saved != i:
+            self._save(i, state)
+
+
+class EvalHook(Hook):
+    """Run ``eval_fn(state)`` once after the loop (ranks, MRR, ...)."""
+
+    def __init__(self, eval_fn: Callable):
+        self.eval_fn = eval_fn
+
+    def on_end(self, i, state):
+        self.eval_fn(state)
+
+
+class MetricsHook(Hook):
+    """Record scalar metrics per step — used by tests and benchmarks."""
+
+    def __init__(self, keys: Sequence[str] = ("loss",)):
+        self.keys = tuple(keys)
+        self.history = {k: [] for k in self.keys}
+
+    def on_step(self, i, state, metrics, stats):
+        for k in self.keys:
+            self.history[k].append(float(metrics[k]))
+
+
+class ThroughputHook(Hook):
+    """One end-of-run throughput line (serve / benchmark loops)."""
+
+    def __init__(self, items_per_step: int = 1, label: str = "steps",
+                 start: int = 0, print_fn: Callable[[str], None] = print):
+        self.items_per_step = items_per_step
+        self.label = label
+        self.start = start
+        self.print_fn = print_fn
+        self.t0 = time.time()
+
+    def on_end(self, i, state):
+        dt = max(time.time() - self.t0, 1e-9)
+        n = i - self.start
+        self.print_fn(f"{n} steps in {dt:.2f}s -> "
+                      f"{n * self.items_per_step / dt:.1f} {self.label}/s")
+
+
+def _finish(i: int, state, hooks):
+    for h in hooks:
+        out = h.on_end(i, state)
+        if out is not None:
+            state = out
+    return state
+
+
+def train_loop(step_fn, state, make_batch, n_steps: int, *, start: int = 0,
+               hooks: Sequence[Hook] = (), prefetch: bool = True):
+    """Drive ``step_fn`` from ``start`` (exclusive) to ``n_steps``.
+
+    make_batch() -> (batch, stats); stats may be None. With ``prefetch``
+    batches are produced one step ahead on a host thread.
+    """
+    if start >= n_steps:
+        return _finish(start, state, hooks)
+    src = Prefetcher(make_batch) if prefetch else iter(make_batch, object())
+    i = start
+    try:
+        for i, (batch, stats) in zip(range(start + 1, n_steps + 1), src):
+            state, metrics = step_fn(state, batch)
+            for h in hooks:
+                h.on_step(i, state, metrics, stats)
+    finally:
+        if prefetch:
+            src.close()
+    return _finish(i, state, hooks)
+
+
+def run_loop(step_fn, state, n_steps: int, *, start: int = 0,
+             hooks: Sequence[Hook] = ()):
+    """Batch-free variant: ``step_fn(i, state) -> (state, metrics)`` with the
+    0-based step index — serve decode loops, synthetic benchmark loops."""
+    i = start
+    for i in range(start + 1, n_steps + 1):
+        state, metrics = step_fn(i - 1, state)
+        for h in hooks:
+            h.on_step(i, state, metrics, stats=None)
+    return _finish(i, state, hooks)

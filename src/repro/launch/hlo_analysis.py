@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from collections import defaultdict
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.common import compat

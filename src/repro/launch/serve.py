@@ -10,7 +10,6 @@ launch/dryrun.py without allocation):
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
@@ -30,6 +29,7 @@ def main():
 
     from repro.common import compat
     from repro.configs import get_arch
+    from repro.launch.engine import ThroughputHook, run_loop
     from repro.models.transformer import build_model
 
     cfg = get_arch(args.arch)
@@ -49,25 +49,28 @@ def main():
 
     decode = compat.jit(model.decode_step, donate_argnums=(1,))
 
-    # prefill via decode loop (prefill_step exists for the batch path; the
-    # serving loop here feeds the prompt token by token to fill the caches)
-    t0 = time.time()
-    logits = None
-    for i in range(T):
-        logits, caches = decode(params, caches, tokens[:, i : i + 1],
-                                jnp.asarray(i, jnp.int32))
+    # prefill + generate through the shared engine loop (prefill_step exists
+    # for the batch path; the serving loop here feeds the prompt token by
+    # token to fill the caches, then greedy-decodes)
     out = []
-    for i in range(args.gen):
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out.append(np.asarray(nxt))
-        logits, caches = decode(params, caches, nxt,
-                                jnp.asarray(T + i, jnp.int32))
-    dt = time.time() - t0
+
+    def decode_step(i, carry):
+        logits, caches = carry
+        if i < T:
+            tok = tokens[:, i : i + 1]
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            out.append(np.asarray(tok))
+        logits, caches = decode(params, caches, tok, jnp.asarray(i, jnp.int32))
+        return (logits, caches), {}
+
+    steps = T + args.gen
+    logits, _ = run_loop(
+        decode_step, (None, caches), steps,
+        hooks=[ThroughputHook(items_per_step=B, label="tok")])
     gen = np.concatenate(out, axis=1)
     print(f"arch={cfg.name} reduced={not args.full} batch={B}")
     print(f"generated tokens:\n{gen}")
-    steps = T + args.gen
-    print(f"{steps} decode steps in {dt:.2f}s -> {steps*B/dt:.1f} tok/s")
     assert np.isfinite(np.asarray(logits)).all()
 
 

@@ -13,17 +13,18 @@ All of the paper's techniques are switchable:
     --neg-mode joint|naive        (T1)
     --neg-deg-ratio 0.5           (T2)
     --partitioner metis|random    (T3)
-    --no-overlap                  (T5 off)
+    --no-overlap                  (T5 off — applies to BOTH modes now that
+                                   the single-machine path supports overlap)
     --use-kernel                  (Pallas kge_score)
+
+Both modes run through launch/engine.train_loop — the mode only decides the
+step function, the sampler, and the store backend (see core/step.py).
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
-
-import numpy as np
 
 
 def main():
@@ -53,8 +54,6 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-
-    import jax
 
     from repro.configs import KGE_DATASETS
     from repro.data.kg_synth import fb15k_like, freebase_like, wn18_like
@@ -103,60 +102,55 @@ def main():
 
 
 def _train_single(args, cfg, kg, pairwise_fn):
+    import functools
+
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
+    from repro.common.checkpoint import latest_step, restore_checkpoint
     from repro.core import eval as E
     from repro.core.kge_model import (
-        batch_to_device, init_state, make_train_step, naive_train_step,
+        batch_to_device, flush_state, init_state, make_train_step,
+        naive_train_step,
     )
     from repro.core.sampling import JointSampler, NaiveSampler
-    from repro.data.pipeline import Prefetcher
+    from repro.launch.engine import (
+        CheckpointHook, EvalHook, LoggingHook, train_loop,
+    )
 
     rng = np.random.default_rng(args.seed)
-    state = init_state(cfg, jax.random.key(args.seed))
+    # T5 overlap on the single-machine path (joint mode only: the naive
+    # strawman keeps immediate updates, matching the paper's baseline)
+    overlap = cfg.overlap_update and args.neg_mode == "joint"
+    state = init_state(cfg, jax.random.key(args.seed), overlap=overlap)
     if args.neg_mode == "joint":
         sampler = JointSampler(kg.train, cfg.n_entities, cfg, rng)
         step = make_train_step(cfg, pairwise_fn)
         to_dev = batch_to_device
     else:
         sampler = NaiveSampler(kg.train, cfg.n_entities, cfg, rng)
-        import functools
-
         step = jax.jit(functools.partial(naive_train_step, cfg))
         to_dev = lambda b: {
             "h": jnp.asarray(b.h, jnp.int32), "r": jnp.asarray(b.r, jnp.int32),
             "t": jnp.asarray(b.t, jnp.int32), "neg": jnp.asarray(b.neg, jnp.int32)}
 
-    import jax as _jax
-
-    from repro.common.checkpoint import (
-        latest_step, restore_checkpoint, save_checkpoint,
-    )
-
     start = 0
     if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        abstract = _jax.tree.map(
-            lambda x: _jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
         state = restore_checkpoint(args.ckpt_dir, abstract)
         start = int(state.step)
         print(f"resumed from step {start}")
 
-    pf = Prefetcher(lambda: to_dev(sampler.sample()))
-    t0 = time.time()
-    for i, batch in zip(range(start, args.steps), pf):
-        state, m = step(state, batch)
-        if (i + 1) % args.log_every == 0:
-            dt = time.time() - t0
-            print(f"step {i+1:6d} loss {float(m['loss']):8.4f} "
-                  f"({(i+1-start)/dt:6.1f} steps/s, "
-                  f"{(i+1-start)*cfg.batch_size/dt:9.0f} triplets/s)")
-        if args.ckpt_dir and args.save_every and (i + 1) % args.save_every == 0:
-            save_checkpoint(args.ckpt_dir, i + 1, state)
+    flush = functools.partial(flush_state, cfg)
+    hooks = [LoggingHook(args.log_every, batch_size=cfg.batch_size, start=start)]
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, args.steps, state)
-    pf.close()
-    if args.eval:
+        hooks.append(CheckpointHook(args.ckpt_dir, args.save_every,
+                                    flush_fn=flush))
+
+    def evaluate(state):
+        state = flush(state)
         test = kg.test[: args.eval_n]
         if cfg.n_entities <= 60_000:
             fm = E.build_filter_map(kg.triplets)
@@ -165,17 +159,26 @@ def _train_single(args, cfg, kg, pairwise_fn):
             ranks = E.ranks_protocol2(cfg, state, test, kg.degrees().astype(np.float64))
         print("eval:", E.metrics_from_ranks(ranks))
 
+    if args.eval:
+        hooks.append(EvalHook(evaluate))
+
+    train_loop(step, state, lambda: (to_dev(sampler.sample()), None),
+               args.steps, start=start, hooks=hooks)
+
 
 def _train_distributed(args, cfg, kg, pairwise_fn):
+    import numpy as np
+
     import jax
     import jax.numpy as jnp
 
+    from repro.common.checkpoint import latest_step, restore_checkpoint
+    from repro.common.compat import set_mesh
     from repro.core.distributed import build_dist_train_step, init_dist_state, make_program
     from repro.core.graph_part import cut_fraction, partition
     from repro.core.rel_part import relation_partition
-    from repro.common.compat import set_mesh
     from repro.core.sampling import DistSampler
-    from repro.data.pipeline import Prefetcher
+    from repro.launch.engine import CheckpointHook, LoggingHook, train_loop
     from repro.launch.mesh import make_mesh
 
     dshape = tuple(int(x) for x in args.mesh.split("x"))
@@ -193,25 +196,30 @@ def _train_distributed(args, cfg, kg, pairwise_fn):
     step, state_sh, batch_sh = build_dist_train_step(prog, mesh, pairwise_fn)
 
     with set_mesh(mesh):
-        state = jax.device_put(init_dist_state(prog, jax.random.key(args.seed)),
-                               state_sh)
+        start = 0
+        if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+            abstract = jax.tree.map(
+                lambda sd: jax.ShapeDtypeStruct(sd.shape, sd.dtype),
+                prog.state_shapes())
+            state = jax.device_put(restore_checkpoint(args.ckpt_dir, abstract),
+                                   state_sh)
+            start = int(state["step"])
+            print(f"resumed from step {start}")
+        else:
+            state = jax.device_put(
+                init_dist_state(prog, jax.random.key(args.seed)), state_sh)
 
         def make_batch():
             db = sampler.sample()
-            return {k: jnp.asarray(getattr(db, k)) for k in batch_sh}, db.stats
+            batch = {k: jax.device_put(jnp.asarray(getattr(db, k)), batch_sh[k])
+                     for k in batch_sh}
+            return batch, db.stats
 
-        pf = Prefetcher(make_batch)
-        t0 = time.time()
-        drops = 0
-        for i, (batch, stats) in zip(range(args.steps), pf):
-            batch = {k: jax.device_put(v, batch_sh[k]) for k, v in batch.items()}
-            state, m = step(state, batch)
-            drops += stats["dropped"]
-            if (i + 1) % args.log_every == 0:
-                dt = time.time() - t0
-                print(f"step {i+1:6d} loss {float(m['loss']):8.4f} "
-                      f"({(i+1)/dt:6.1f} steps/s, drop {drops/(i+1)/cfg.batch_size/n_parts:.2%})")
-        pf.close()
+        hooks = [LoggingHook(args.log_every,
+                             batch_size=cfg.batch_size * n_parts, start=start)]
+        if args.ckpt_dir:
+            hooks.append(CheckpointHook(args.ckpt_dir, args.save_every))
+        train_loop(step, state, make_batch, args.steps, start=start, hooks=hooks)
     print("done")
 
 

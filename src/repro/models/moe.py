@@ -19,7 +19,7 @@ pattern is explicit (and visible to the roofline pass).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

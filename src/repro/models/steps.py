@@ -10,8 +10,7 @@ sharded like the params (FSDP-friendly), then the config's optimizer.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,8 +20,7 @@ frame embeddings directly.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Distributed KGE: KVStore pull/push correctness and end-to-end training on
 (data, model) and (pod, data, model) meshes."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,7 @@ from repro.core.distributed import (
 from repro.core.graph_part import partition
 from repro.core.rel_part import relation_partition
 from repro.core.sampling import DistSampler
-from repro.embeddings.kvstore import KVStoreSpec, pull_local, pull_remote, push_remote_grads
+from repro.embeddings.kvstore import KVStoreSpec, pull_remote, push_remote_grads
 from repro.common.compat import set_mesh, shard_map
 
 

@@ -1,0 +1,115 @@
+"""launch/engine: the one loop every driver uses — hooks, resume, checkpoints.
+
+Pure-host tests (no jax): step_fn is a counter, batches are tokens.
+"""
+
+from repro.launch.engine import (
+    CheckpointHook, Hook, LoggingHook, MetricsHook, run_loop, train_loop,
+)
+
+
+def _count_step(state, batch):
+    return state + 1, {"loss": float(state)}
+
+
+def _batches():
+    return ({"x": 0}, {"dropped": 3})
+
+
+class _SaveRecorder:
+    def __init__(self):
+        self.calls = []
+
+    def __call__(self, ckpt_dir, step, state):
+        self.calls.append((step, state))
+
+
+def test_train_loop_runs_n_steps():
+    state = train_loop(_count_step, 0, _batches, 5, prefetch=False)
+    assert state == 5
+
+
+def test_train_loop_honors_start():
+    """Resume: start=3 means only steps 4..5 run."""
+    state = train_loop(_count_step, 3, _batches, 5, start=3, prefetch=False)
+    assert state == 5  # 3 + 2 steps
+    # fully-trained resume: no steps, hooks still finalized
+    mh = MetricsHook()
+    state = train_loop(_count_step, 7, _batches, 5, start=7, hooks=[mh],
+                       prefetch=False)
+    assert state == 7 and mh.history["loss"] == []
+
+
+def test_checkpoint_hook_no_duplicate_final_save(tmp_path):
+    """save_every already covering the final step -> no redundant save."""
+    rec = _SaveRecorder()
+    hook = CheckpointHook(str(tmp_path), save_every=2, save_fn=rec)
+    train_loop(_count_step, 0, _batches, 4, hooks=[hook], prefetch=False)
+    assert [s for s, _ in rec.calls] == [2, 4]
+
+
+def test_checkpoint_hook_final_save_when_needed(tmp_path):
+    rec = _SaveRecorder()
+    hook = CheckpointHook(str(tmp_path), save_every=2, save_fn=rec)
+    train_loop(_count_step, 0, _batches, 5, hooks=[hook], prefetch=False)
+    assert [s for s, _ in rec.calls] == [2, 4, 5]
+    # and with periodic saves off, exactly one final save
+    rec2 = _SaveRecorder()
+    hook2 = CheckpointHook(str(tmp_path), save_every=0, save_fn=rec2)
+    train_loop(_count_step, 0, _batches, 3, hooks=[hook2], prefetch=False)
+    assert [s for s, _ in rec2.calls] == [3]
+
+
+def test_checkpoint_hook_flush_fn_applied(tmp_path):
+    """Deferred (T5) state must be flushed into every checkpoint."""
+    rec = _SaveRecorder()
+    hook = CheckpointHook(str(tmp_path), save_every=2, save_fn=rec,
+                          flush_fn=lambda s: s + 1000)
+    train_loop(_count_step, 0, _batches, 2, hooks=[hook], prefetch=False)
+    assert rec.calls == [(2, 1002)]
+
+
+def test_metrics_hook_records_history():
+    mh = MetricsHook(["loss"])
+    train_loop(_count_step, 0, _batches, 4, hooks=[mh], prefetch=False)
+    assert mh.history["loss"] == [0.0, 1.0, 2.0, 3.0]
+
+
+def test_logging_hook_reports_drops():
+    lines = []
+    lh = LoggingHook(log_every=2, batch_size=10, print_fn=lines.append)
+    train_loop(_count_step, 0, _batches, 4, hooks=[lh], prefetch=False)
+    assert len(lines) == 2
+    assert "loss" in lines[0] and "drop" in lines[0]
+    # 3 dropped per step of 10 samples = 30%
+    assert "30.00%" in lines[1]
+
+
+def test_on_end_can_replace_state():
+    class Flusher(Hook):
+        def on_end(self, i, state):
+            return state * 100
+
+    state = train_loop(_count_step, 0, _batches, 2, hooks=[Flusher()],
+                       prefetch=False)
+    assert state == 200
+
+
+def test_run_loop_indices_and_hooks():
+    seen = []
+
+    def step(i, state):
+        seen.append(i)
+        return state + i, {"loss": 0.0}
+
+    mh = MetricsHook()
+    state = run_loop(step, 0, 4, hooks=[mh])
+    assert seen == [0, 1, 2, 3]
+    assert state == 6
+    assert len(mh.history["loss"]) == 4
+
+
+def test_train_loop_prefetches():
+    """The default prefetching path produces identical results."""
+    state = train_loop(_count_step, 0, _batches, 6)
+    assert state == 6

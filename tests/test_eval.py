@@ -3,7 +3,7 @@
 import numpy as np
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.eval import Metrics, build_filter_map, metrics_from_ranks
+from repro.core.eval import build_filter_map, metrics_from_ranks
 
 
 def test_metrics_hand_example():

@@ -1,7 +1,6 @@
 """Graph (T3) and relation (T4) partitioning invariants."""
 
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.graph_part import (

@@ -6,7 +6,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.common.config import InputShape
 from repro.configs import ARCHS
@@ -63,7 +62,6 @@ def test_train_step_fsdp_moe(mesh8):
 
 
 def test_serve_step_on_mesh(mesh8):
-    shape = InputShape("d", 64, 8, "decode")
     cfg = _reduced_mesh_cfg("h2o-danube-1.8b", mesh8)
     model = build_model(cfg, mesh=mesh8)
     serve = build_serve_step(model)

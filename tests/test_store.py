@@ -1,0 +1,185 @@
+"""EmbeddingStore backends: Dense vs Sharded parity, snapshots, Replicated math.
+
+The load-bearing test here is n_parts == 1 parity: the distributed step is
+the SAME ``store_train_step`` over a ``ShardedStore`` whose KVStore has
+``machine_axis=None``, so if Dense and Sharded agree numerically, the
+single-machine and cluster trainers implement one algorithm.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.checkpoint import restore_checkpoint, save_checkpoint
+from repro.common.config import KGEConfig
+from repro.core.kge_model import (
+    batch_to_device, dense_step_batch, init_state, stores_from_state,
+)
+from repro.core.sampling import JointSampler
+from repro.core.step import store_train_step
+from repro.embeddings.kvstore import KVStoreSpec
+from repro.embeddings.store import (
+    DenseStore, EmbeddingStore, ReplicatedStore, ShardedIds, ShardedStore,
+)
+
+
+def _cfg(kg, **kw):
+    base = dict(model="transe_l2", n_entities=kg.n_entities,
+                n_relations=kg.n_relations, dim=32, batch_size=64,
+                neg_sample_size=32, lr=0.1, n_parts=1)
+    base.update(kw)
+    return KGEConfig(**base)
+
+
+def _sharded_stores(cfg, state, defer=False, pend_slots=0):
+    """The n_parts == 1 degenerate KVStore view of a KGEState."""
+    spec = KVStoreSpec(machine_axis=None, n_parts=1, remote_capacity=1)
+    return {
+        "entity": ShardedStore.create(state.entity, spec, cfg.lr, defer=defer,
+                                      pend_slots=pend_slots),
+        "rel": ShardedStore.create(state.r_emb, spec, cfg.lr),
+    }
+
+
+def _to_sharded_batch(db):
+    """Dense workspace batch -> ShardedIds with an all-pad remote request."""
+    pad = jnp.full((1, 1), -1, jnp.int32)
+    sb = dict(db)
+    sb["ent_ids"] = ShardedIds(db["ent_ids"], pad)
+    sb["rel_ids"] = ShardedIds(db["rel_ids"], pad)
+    return sb
+
+
+def test_stores_satisfy_protocol(small_kg):
+    cfg = _cfg(small_kg)
+    state = init_state(cfg, jax.random.key(0))
+    spec = KVStoreSpec(machine_axis=None, n_parts=1, remote_capacity=1)
+    for store in (DenseStore.create(state.entity, cfg.lr),
+                  ShardedStore.create(state.entity, spec, cfg.lr),
+                  ReplicatedStore.create(state.r_emb, cfg.lr)):
+        assert isinstance(store, EmbeddingStore)
+
+
+@pytest.mark.parametrize("defer", [False, True])
+def test_sharded_matches_dense_n_parts_1(small_kg, defer):
+    """Same batches through DenseStore and the degenerate ShardedStore must
+    produce identical losses and identical tables (overlap on and off)."""
+    cfg = _cfg(small_kg)
+    state = init_state(cfg, jax.random.key(0),
+                       overlap=defer)
+    sampler = JointSampler(small_kg.train, cfg.n_entities, cfg,
+                           np.random.default_rng(0))
+    batches = [dense_step_batch(batch_to_device(sampler.sample()))
+               for _ in range(3)]
+
+    dstores = stores_from_state(cfg, state)
+    # sharded pend must hold the whole workspace: L local + 1 remote pad slot
+    sstores = _sharded_stores(cfg, state, defer=defer,
+                              pend_slots=batches[0]["ent_ids"].shape[0] + 1)
+
+    for db in batches:
+        dstores, dm = store_train_step(cfg, dstores, db)
+        sstores, sm = store_train_step(cfg, sstores, _to_sharded_batch(db))
+        np.testing.assert_allclose(float(sm["loss"]), float(dm["loss"]),
+                                   rtol=1e-6)
+
+    dent, sent = dstores["entity"].flush(), sstores["entity"].flush()
+    np.testing.assert_allclose(np.asarray(sent.table), np.asarray(dent.table),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(sent.gsq), np.asarray(dent.gsq),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(sstores["rel"].table),
+                               np.asarray(dstores["rel"].table),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_defer_then_flush_equals_immediate(small_kg):
+    """One deferred step + flush() == one immediate step (T5 conservation)."""
+    cfg = _cfg(small_kg)
+    state = init_state(cfg, jax.random.key(1))
+    sampler = JointSampler(small_kg.train, cfg.n_entities, cfg,
+                           np.random.default_rng(1))
+    db = dense_step_batch(batch_to_device(sampler.sample()))
+
+    immediate = stores_from_state(cfg, state)
+    immediate, _ = store_train_step(cfg, immediate, db)
+
+    slots = db["ent_ids"].shape[0]
+    deferred = stores_from_state(cfg, state)
+    deferred["entity"] = DenseStore(
+        state.entity, state.ent_gsq,
+        jnp.full((slots,), -1, jnp.int32),
+        jnp.zeros((slots, cfg.dim), jnp.float32),
+        lr=cfg.lr, defer=True)
+    deferred, _ = store_train_step(cfg, deferred, db)
+    assert np.asarray(deferred["entity"].pend_ids >= 0).any()
+
+    flushed = deferred["entity"].flush()
+    np.testing.assert_array_equal(np.asarray(flushed.pend_ids), -1)
+    np.testing.assert_allclose(np.asarray(flushed.table),
+                               np.asarray(immediate["entity"].table),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(flushed.gsq),
+                               np.asarray(immediate["entity"].gsq),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_snapshot_restore_checkpoint_roundtrip(tmp_path, small_kg):
+    """snapshot() -> save_checkpoint -> restore_checkpoint -> restore()."""
+    cfg = _cfg(small_kg)
+    state = init_state(cfg, jax.random.key(2))
+    sampler = JointSampler(small_kg.train, cfg.n_entities, cfg,
+                           np.random.default_rng(2))
+    db = dense_step_batch(batch_to_device(sampler.sample()))
+    stores, _ = store_train_step(cfg, stores_from_state(cfg, state), db)
+    ent = stores["entity"]
+
+    snap = ent.snapshot()
+    save_checkpoint(str(tmp_path), 1, snap)
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            snap)
+    loaded = restore_checkpoint(str(tmp_path), abstract)
+    restored = DenseStore.create(jnp.zeros_like(ent.table),
+                                 cfg.lr).restore(loaded)
+    np.testing.assert_array_equal(np.asarray(restored.table),
+                                  np.asarray(ent.table))
+    np.testing.assert_array_equal(np.asarray(restored.gsq),
+                                  np.asarray(ent.gsq))
+
+
+def test_replicated_store_adagrad_math():
+    """Scatter with dup + pad ids == dense Adagrad on the aggregated grad."""
+    table = jnp.asarray(np.random.default_rng(0).normal(size=(6, 4)),
+                        jnp.float32)
+    store = ReplicatedStore.create(table, lr=0.5)
+    ids = jnp.asarray([1, 1, 3, -1], jnp.int32)
+    grads = jnp.asarray(np.random.default_rng(1).normal(size=(4, 4)),
+                        jnp.float32)
+    out = store.apply_sparse_grads(ids, grads)
+
+    g = np.zeros((6, 4), np.float32)
+    g[1] = np.asarray(grads[0] + grads[1])
+    g[3] = np.asarray(grads[2])  # id -1 dropped
+    gsq = g ** 2
+    expect = np.asarray(table) - 0.5 * g / (np.sqrt(gsq) + 1e-10)
+    np.testing.assert_allclose(np.asarray(out.table), expect, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out.gsq), gsq, rtol=1e-6)
+    # untouched rows bit-identical
+    np.testing.assert_array_equal(np.asarray(out.table)[[0, 2, 4, 5]],
+                                  np.asarray(table)[[0, 2, 4, 5]])
+
+
+def test_dense_store_ignores_pad_ids(small_kg):
+    """-1 ids in apply_sparse_grads are dropped (the pad convention)."""
+    cfg = _cfg(small_kg)
+    state = init_state(cfg, jax.random.key(3))
+    store = DenseStore.create(state.entity, cfg.lr)
+    ids = jnp.asarray([-1, -1, 5], jnp.int32)
+    grads = jnp.ones((3, cfg.dim), jnp.float32)
+    out = store.apply_sparse_grads(ids, grads)
+    before, after = np.asarray(state.entity), np.asarray(out.table)
+    assert np.abs(after[5] - before[5]).sum() > 0
+    mask = np.ones(cfg.n_entities, bool)
+    mask[5] = False
+    np.testing.assert_array_equal(after[mask], before[mask])

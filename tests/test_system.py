@@ -5,7 +5,6 @@ joint/degree negative sampling -> sparse-Adagrad training -> link-prediction
 eval, in both single-machine and distributed (8-CPU-device mesh) modes.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
