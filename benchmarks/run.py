@@ -20,6 +20,7 @@ Mapping (see DESIGN.md §6):
     table5  bench_accuracy            per-model accuracy tables
     kernel  bench_kernels             T1 GEMM arithmetic intensity
     roofline bench_roofline           dry-run roofline table (pod scale)
+    hogwild bench_hogwild             §3.1 multi-trainer triplets/s scaling
 """
 
 import argparse
@@ -36,9 +37,9 @@ def main() -> None:
         os.environ["BENCH_FAST"] = "0"
 
     from benchmarks import (
-        bench_accuracy, bench_capacity, bench_degree_negatives, bench_kernels,
-        bench_negative_sampling, bench_overlap, bench_partitioning,
-        bench_roofline, bench_scaling,
+        bench_accuracy, bench_capacity, bench_degree_negatives, bench_hogwild,
+        bench_kernels, bench_negative_sampling, bench_overlap,
+        bench_partitioning, bench_roofline, bench_scaling,
     )
 
     suites = {
@@ -51,6 +52,7 @@ def main() -> None:
         "table5": bench_accuracy.run,
         "kernel": bench_kernels.run,
         "roofline": bench_roofline.run,
+        "hogwild": bench_hogwild.run,
     }
     wanted = [w for w in args.only.split(",") if w] or list(suites)
     print("name,us_per_call,derived")

@@ -11,7 +11,6 @@ import sys
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 sys.path.insert(0, "src")
 
-import dataclasses
 import time
 
 import jax
@@ -25,6 +24,7 @@ from repro.core.graph_part import cut_fraction, partition
 from repro.core.rel_part import relation_partition
 from repro.core.sampling import DistSampler
 from repro.data.kg_synth import make_synthetic_kg
+from repro.data.pipeline import worker_rngs
 from repro.launch.engine import Hook, MetricsHook, train_loop
 from repro.launch.mesh import make_mesh
 
@@ -41,20 +41,27 @@ def run(partitioner: str, kg, cfg, mesh, steps=60):
     book = partition(kg.train, cfg.n_entities, cfg.n_parts, method=partitioner)
     rp = relation_partition(kg.rel_counts(), cfg.n_parts)
     prog = make_program(cfg, book.rows_per_part, rp.slots_per_part, rp.n_shared)
-    sampler = DistSampler(kg.train, book, rp, cfg, np.random.default_rng(0))
     step, state_sh, batch_sh = build_dist_train_step(prog, mesh)
 
-    def make_batch():
-        db = sampler.sample()
-        batch = {k: jax.device_put(jnp.asarray(getattr(db, k)), batch_sh[k])
-                 for k in batch_sh}
-        return batch, db.stats
+    # two sampler workers with independent RNG streams feed the trainer
+    # through one bounded queue (paper §3.3 / launch/runtime.py)
+    samplers = [DistSampler(kg.train, book, rp, cfg, r)
+                for r in worker_rngs(0, 2)]
+
+    def batch_fn(s):
+        def make():
+            db = s.sample()
+            batch = {k: jax.device_put(jnp.asarray(getattr(db, k)), batch_sh[k])
+                     for k in batch_sh}
+            return batch, db.stats
+        return make
 
     mh, dc = MetricsHook(["loss"]), DropCounter()
     with set_mesh(mesh):
         state = jax.device_put(init_dist_state(prog, jax.random.key(0)), state_sh)
         t0 = time.time()
-        train_loop(step, state, make_batch, steps, hooks=[mh, dc])
+        train_loop(step, state, batch_fn(samplers[0]), steps, hooks=[mh, dc],
+                   n_samplers=2, sampler_factory=lambda wid: batch_fn(samplers[wid]))
         dt = time.time() - t0
     losses = mh.history["loss"]
     cut = cut_fraction(kg.train, book.part_of)

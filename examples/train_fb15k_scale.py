@@ -17,12 +17,20 @@ def main():
     ap.add_argument("--steps", type=int, default=3000)
     ap.add_argument("--model", default="transe_l2")
     ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--trainers", type=int, default=1,
+                    help="Hogwild trainer threads (paper §3.1)")
+    ap.add_argument("--samplers", type=int, default=1,
+                    help="sampler worker threads (paper §3.3)")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="periodic MRR every K steps")
     args = ap.parse_args()
     cmd = [
         sys.executable, "-m", "repro.launch.train",
         "--dataset", "fb15k", "--model", args.model,
         "--steps", str(args.steps), "--scale", str(args.scale),
         "--dim", "128", "--eval", "--eval-n", "1000",
+        "--trainers", str(args.trainers), "--samplers", str(args.samplers),
+        "--eval-every", str(args.eval_every),
     ]
     print(" ".join(cmd))
     subprocess.run(cmd, check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})

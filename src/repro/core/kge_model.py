@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.common.config import KGEConfig
 from repro.core.sampling import MODES, KGBatch
-from repro.core.step import store_train_step
+from repro.core.step import store_apply_grads, store_grads, store_train_step
 from repro.embeddings.store import DenseStore
 from repro.embeddings.table import emb_init_scale
 
@@ -163,6 +163,43 @@ def train_step(
 
 def make_train_step(cfg: KGEConfig, pairwise_fn=None):
     return jax.jit(functools.partial(train_step, cfg, pairwise_fn=pairwise_fn))
+
+
+# --------------------------------------------------------------------------
+# Hogwild two-phase step (paper §3.1, launch/runtime.py): gradients computed
+# against a possibly STALE published state, applied to the LATEST one. See
+# the staleness/flush contract in embeddings/store.py.
+# --------------------------------------------------------------------------
+def grad_step(cfg: KGEConfig, state: KGEState, batch, pairwise_fn=None):
+    """Phases 2–3 of the step against ``state`` (possibly stale).
+
+    Multi-trainer requires immediate updates (``overlap=False``): Hogwild
+    already overlaps update with compute, and a deferred pending buffer is
+    single-writer by construction.
+    """
+    if state.pend_ids is not None:
+        raise ValueError("Hogwild trainers require overlap off: "
+                         "init_state(..., overlap=False)")
+    return store_grads(cfg, stores_from_state(cfg, state),
+                       dense_step_batch(batch), pairwise_fn=pairwise_fn)
+
+
+def apply_step(cfg: KGEConfig, state: KGEState, batch, grads) -> KGEState:
+    """Phase 4: apply ``grads`` (from ``grad_step``) to ``state``.
+
+    In the runtime this is dispatched inside ``StoreSlot.swap`` so it always
+    lands on the latest published state — no trainer's update is lost.
+    """
+    stores = store_apply_grads(stores_from_state(cfg, state),
+                               dense_step_batch(batch), grads)
+    return state_from_stores(state, stores)
+
+
+def make_hogwild_step(cfg: KGEConfig, pairwise_fn=None):
+    """(grad_fn, apply_fn) pair for ``train_loop(..., split_step=...)``."""
+    g = jax.jit(functools.partial(grad_step, cfg, pairwise_fn=pairwise_fn))
+    a = jax.jit(functools.partial(apply_step, cfg))
+    return g, a
 
 
 def batch_to_device(batch: KGBatch) -> Dict[str, jnp.ndarray]:

@@ -1,7 +1,8 @@
 """The one KGE train step, parameterized by EmbeddingStores.
 
-Every trainer in the repo — single-machine joint/naive and the shard_map
-cluster path — is this function applied to different store backends:
+Every trainer in the repo — single-machine joint/naive, the Hogwild
+multi-trainer runtime, and the shard_map cluster path — is this function
+applied to different store backends:
 
     single machine   stores = DenseStore(entity/rel[/proj])
     distributed      stores = ShardedStore(entity/rel[/proj]) +
@@ -17,6 +18,14 @@ The step follows the paper's update discipline (§2, §3.4, T5):
   3. score + loss + grads w.r.t. the *workspace rows only* (sparse);
   4. ``apply_sparse_grads()`` on every touched table — the stores decide
      whether to apply now or defer, and where rows physically live.
+
+Phases 2–3 and phase 4 are also exposed separately (``store_grads`` /
+``store_apply_grads``) for the Hogwild multi-trainer runtime (paper §3.1,
+launch/runtime.py): a trainer computes ``store_grads`` against a possibly
+*stale* published store and applies them with ``store_apply_grads`` to the
+*latest* one — the staleness/flush contract is documented in
+embeddings/store.py. ``store_train_step`` is exactly the composition of the
+two phases on the same (flushed) store.
 
 Batch normal form (what both samplers lower to):
 
@@ -44,7 +53,7 @@ from repro.embeddings.table import emb_init_scale
 Stores = Dict[str, object]  # "entity", "rel", optional "proj", "shared"
 
 
-def store_train_step(
+def store_grads(
     cfg: KGEConfig,
     stores: Stores,
     batch: Dict[str, jnp.ndarray],
@@ -52,10 +61,15 @@ def store_train_step(
     neg_mode: str = "joint",
     ctx: Optional[S.ShardCtx] = None,
     n_servers: int = 1,
-    machine_axis=None,
     pairwise_fn=None,
-) -> Tuple[Stores, Dict[str, jnp.ndarray]]:
-    """One sparse mini-batch step over pluggable stores (jit/shard_map-able)."""
+) -> Tuple[Dict[str, jnp.ndarray], Dict[str, jnp.ndarray]]:
+    """Phases 2–3: gather workspaces + loss/metrics + sparse row gradients.
+
+    Returns ``({store name: workspace-row grads}, metrics)``. Does NOT
+    ``flush()`` — a Hogwild trainer gathers from the published store as-is
+    (stale reads tolerated, paper §3.1); the one-shot ``store_train_step``
+    flushes before calling this.
+    """
     ctx = S.ShardCtx(None) if ctx is None else ctx
     scale = emb_init_scale(cfg)
     h_slot, t_slot = batch["h_slot"], batch["t_slot"]
@@ -64,8 +78,8 @@ def store_train_step(
     has_shared = "shared" in stores and rel_shared is not None
     has_proj = "proj" in stores
 
-    # ---- 1+2. flush deferred updates, then pull the workspaces
-    ent = stores["entity"].flush()
+    # ---- 2. pull the workspaces
+    ent = stores["entity"]
     ws = ent.gather(batch["ent_ids"])
     rel_store = stores["rel"]
     rel_ws = rel_store.gather(batch["rel_ids"])
@@ -164,18 +178,63 @@ def store_train_step(
     )(ws, rel_ws, shared_rows, proj_ws)
     gmap = dict(zip(argnums, grads))
 
-    # ---- 4. every row update goes through EmbeddingStore.apply_sparse_grads
-    new_stores = dict(stores)
-    new_stores["entity"] = ent.apply_sparse_grads(batch["ent_ids"], gmap[0])
-    new_stores["rel"] = rel_store.apply_sparse_grads(batch["rel_ids"], gmap[1])
+    out = {"entity": gmap[0], "rel": gmap[1]}
     if has_shared:
-        new_stores["shared"] = stores["shared"].apply_sparse_grads(
-            rel_shared, gmap[2])
+        out["shared"] = gmap[2]
     if has_proj:
-        new_stores["proj"] = stores["proj"].apply_sparse_grads(
-            batch["rel_ids"], gmap[3])
-
+        out["proj"] = gmap[3]
     metrics = {"loss": loss, "pos_score": pos_m, "neg_score": neg_m}
+    return out, metrics
+
+
+def store_apply_grads(
+    stores: Stores,
+    batch: Dict[str, jnp.ndarray],
+    grads: Dict[str, jnp.ndarray],
+) -> Stores:
+    """Phase 4: every row update goes through EmbeddingStore.apply_sparse_grads.
+
+    In Hogwild mode this runs inside ``StoreSlot.swap`` against the *latest*
+    published stores, which may be newer than the ones ``store_grads`` read —
+    no update is ever lost, only computed against slightly stale rows.
+    """
+    new_stores = dict(stores)
+    new_stores["entity"] = stores["entity"].apply_sparse_grads(
+        batch["ent_ids"], grads["entity"])
+    new_stores["rel"] = stores["rel"].apply_sparse_grads(
+        batch["rel_ids"], grads["rel"])
+    if "shared" in grads:
+        new_stores["shared"] = stores["shared"].apply_sparse_grads(
+            batch["rel_shared"], grads["shared"])
+    if "proj" in grads:
+        new_stores["proj"] = stores["proj"].apply_sparse_grads(
+            batch["rel_ids"], grads["proj"])
+    return new_stores
+
+
+def store_train_step(
+    cfg: KGEConfig,
+    stores: Stores,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    neg_mode: str = "joint",
+    ctx: Optional[S.ShardCtx] = None,
+    n_servers: int = 1,
+    machine_axis=None,
+    pairwise_fn=None,
+) -> Tuple[Stores, Dict[str, jnp.ndarray]]:
+    """One sparse mini-batch step over pluggable stores (jit/shard_map-able).
+
+    The composition flush → ``store_grads`` → ``store_apply_grads`` on one
+    store set (grads applied to the stores they were computed against).
+    """
+    # ---- 1. flush deferred updates (T5) before gathering
+    stores = dict(stores)
+    stores["entity"] = stores["entity"].flush()
+    grads, metrics = store_grads(
+        cfg, stores, batch, neg_mode=neg_mode, ctx=ctx, n_servers=n_servers,
+        pairwise_fn=pairwise_fn)
+    new_stores = store_apply_grads(stores, batch, grads)
     if machine_axis is not None:
         metrics = {name: jax.lax.pmean(v, machine_axis)
                    for name, v in metrics.items()}

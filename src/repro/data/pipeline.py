@@ -1,8 +1,20 @@
-"""Host data pipeline: background sampling, double-buffered.
+"""Host data pipeline: N sampler workers feeding one bounded batch queue.
 
-DGL-KE offloads sampling to DGL on CPU while GPUs compute (paper §3.3). The
-JAX analogue: a producer thread runs the numpy sampler; jax dispatch is async,
-so the device computes step t while the host builds batch t+1.
+DGL-KE offloads sampling to DGL on CPU while accelerators compute (paper
+§3.3), and runs several sampler/trainer processes per machine (§3.1). The
+JAX analogue here: ``WorkerPool`` runs N producer threads over the numpy
+samplers; jax dispatch is async, so devices compute step t while the host
+builds batches t+1, t+2, ...
+
+Backpressure contract: the queue is bounded (``depth``). A sampled batch is
+NEVER discarded — when the queue is full the producer holds the batch and
+retries the put, so a slow consumer costs producer *waiting*, not wasted
+sampling work. ``stats()`` exposes the three backpressure signals (queue
+depth, cumulative producer wait, cumulative consumer wait) that say which
+side of the pipeline is the bottleneck.
+
+``Prefetcher`` (the original single-producer, double-buffered prefetcher) is
+the ``n_workers=1`` special case and keeps its historical constructor.
 """
 
 from __future__ import annotations
@@ -11,47 +23,141 @@ import queue
 import threading
 import time
 import warnings
-from typing import Callable, Iterator
+from typing import Callable, Iterator, List, Optional
+
+import numpy as np
+
+_NOTHING = object()  # "no batch held" sentinel for the producer retry loop
 
 
-class Prefetcher:
-    def __init__(self, sample_fn: Callable[[], object], depth: int = 2):
-        self.sample_fn = sample_fn
+def worker_rngs(seed: int, n: int) -> List[np.random.Generator]:
+    """``n`` independent, non-overlapping numpy Generators for ``n`` workers.
+
+    Uses ``SeedSequence.spawn`` — the numpy-sanctioned way to derive child
+    streams that are statistically independent of each other and of the
+    parent, and deterministic given (seed, n, worker index).
+    """
+    return [np.random.default_rng(s) for s in np.random.SeedSequence(seed).spawn(n)]
+
+
+class WorkerPool:
+    """N producer workers -> one bounded queue with backpressure stats.
+
+    ``factory(worker_id)`` builds each worker's zero-arg sample callable.
+    Give every worker its own RNG (see ``worker_rngs``) — workers run
+    concurrently and must not share a numpy Generator.
+
+    Consume with ``get()`` / iteration; multiple consumer (trainer) threads
+    may ``get()`` concurrently. ``close()`` drains until every worker thread
+    actually exits (see the note in ``close``).
+    """
+
+    def __init__(self, factory: Callable[[int], Callable[[], object]],
+                 n_workers: int = 1, depth: int = 2):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
-        self.thread = threading.Thread(target=self._run, daemon=True)
-        self.thread.start()
+        self._stat_lock = threading.Lock()
+        self._produced = 0
+        self._producer_wait = 0.0
+        self._consumer_wait = 0.0
+        self.threads: List[threading.Thread] = []
+        for wid in range(n_workers):
+            th = threading.Thread(target=self._run, args=(factory(wid),),
+                                  daemon=True, name=f"sampler-{wid}")
+            self.threads.append(th)
+        for th in self.threads:
+            th.start()
 
-    def _run(self):
+    # ---- producer side -----------------------------------------------------
+    def _run(self, sample_fn: Callable[[], object]):
+        held = _NOTHING
         while not self._stop.is_set():
+            if held is _NOTHING:
+                held = sample_fn()
             try:
-                self.q.put(self.sample_fn(), timeout=0.5)
+                # fast path: space available, no wait accounted
+                self.q.put_nowait(held)
             except queue.Full:
-                continue
+                # backpressure: hold the batch and retry — re-running
+                # sample_fn here would silently discard sampled work
+                t0 = time.monotonic()
+                try:
+                    self.q.put(held, timeout=0.2)
+                except queue.Full:
+                    self._add_wait("_producer_wait", t0)
+                    continue  # still holding `held`; check stop, retry
+                self._add_wait("_producer_wait", t0)
+            held = _NOTHING
+            with self._stat_lock:
+                self._produced += 1
+
+    def _add_wait(self, attr: str, t0: float):
+        dt = time.monotonic() - t0
+        with self._stat_lock:
+            setattr(self, attr, getattr(self, attr) + dt)
+
+    # ---- consumer side -----------------------------------------------------
+    def get(self, timeout: Optional[float] = None):
+        """Next batch; blocks (``queue.Empty`` on timeout). Thread-safe."""
+        try:
+            return self.q.get_nowait()
+        except queue.Empty:
+            t0 = time.monotonic()
+            try:
+                return self.q.get(timeout=timeout)
+            finally:
+                self._add_wait("_consumer_wait", t0)
 
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
-        return self.q.get()
+        return self.get()
+
+    # ---- diagnostics / shutdown -------------------------------------------
+    def stats(self) -> dict:
+        """Backpressure snapshot: who is waiting on whom."""
+        with self._stat_lock:
+            return {
+                "queue_depth": self.q.qsize(),
+                "produced": self._produced,
+                "producer_wait_s": self._producer_wait,
+                "consumer_wait_s": self._consumer_wait,
+            }
 
     def close(self, timeout: float = 2.0):
-        # The producer checks _stop only between put attempts, so it can
-        # enqueue one more batch after a single drain and then block in
-        # ``put`` until its 0.5 s timeout — a one-shot drain + join(2.0)
-        # raced that and timed out silently. Drain repeatedly until the
-        # thread actually exits.
+        # Producers check _stop only between put attempts, so each can hold
+        # one more batch after a single drain and then block in ``put`` until
+        # its 0.2 s timeout — a one-shot drain + join raced that and timed
+        # out silently. Drain repeatedly until every thread actually exits.
         self._stop.set()
         deadline = time.monotonic() + timeout
-        while self.thread.is_alive() and time.monotonic() < deadline:
+        while (any(t.is_alive() for t in self.threads)
+               and time.monotonic() < deadline):
             try:
                 while True:
                     self.q.get_nowait()
             except queue.Empty:
                 pass
-            self.thread.join(timeout=0.05)
-        if self.thread.is_alive():
+            for t in self.threads:
+                if t.is_alive():
+                    t.join(timeout=0.05)
+        stuck = [t.name for t in self.threads if t.is_alive()]
+        if stuck:
             warnings.warn(
-                f"Prefetcher producer thread did not exit within {timeout:.1f}s "
-                "of close(); sample_fn is slow or hung — the daemon thread will "
-                "be abandoned", RuntimeWarning)
+                f"{type(self).__name__} producer thread(s) {stuck} did not "
+                f"exit within {timeout:.1f}s of close(); sample_fn is slow or "
+                "hung — the daemon thread(s) will be abandoned", RuntimeWarning)
+
+
+class Prefetcher(WorkerPool):
+    """Single-producer WorkerPool — the original double-buffered prefetcher."""
+
+    def __init__(self, sample_fn: Callable[[], object], depth: int = 2):
+        super().__init__(lambda _wid: sample_fn, n_workers=1, depth=depth)
+
+    @property
+    def thread(self) -> threading.Thread:
+        return self.threads[0]

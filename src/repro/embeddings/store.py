@@ -30,6 +30,25 @@ Update semantics shared by all backends (paper §3.4 + T5):
     rows  = store.gather(ids)                  # read post-update rows
     ...compute grads w.r.t. rows...
     store = store.apply_sparse_grads(ids, g)   # apply now, or defer if overlap
+
+Hogwild multi-trainer contract (paper §3.1, launch/runtime.py):
+
+* ``gather`` may legally read a *stale* published store: a trainer computes
+  gradients against whatever version ``StoreSlot.read()`` returned while
+  other trainers keep publishing. Sparse Adagrad tolerates this exactly as
+  the paper's lock-free shared-memory updates do.
+* ``apply_sparse_grads`` must land on the *latest* published store (inside
+  ``StoreSlot.swap``) — staleness only affects which rows gradients were
+  computed against, never which updates survive; no trainer's update is
+  overwritten. Stores stay functional pytrees, so every published store is
+  an internally consistent snapshot (checkpoint/eval hooks never see a torn
+  state).
+* ``defer=True`` (T5) and multi-trainer are mutually exclusive: the pending
+  buffers are single-writer by design, and Hogwild already overlaps the
+  update with compute. Flush therefore only happens at barriers — before
+  eval/checkpoint and at loop end, when no trainer holds an unapplied
+  gradient (``core/step.py`` flushes inside the one-shot step; the runtime's
+  hooks receive already-published states and flush via their ``flush_fn``).
 """
 
 from __future__ import annotations

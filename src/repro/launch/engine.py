@@ -17,6 +17,15 @@ Hooks see every step *after* it is issued: ``on_step(i, state, metrics,
 stats)`` with ``i`` the 1-based step number, then ``on_end(i, state)`` once.
 ``on_end`` may return a replacement state (e.g. a flushed one); ``None``
 keeps the current state.
+
+With ``n_trainers > 1`` or ``n_samplers > 1`` the loop is the Hogwild-style
+multi-trainer runtime (launch/runtime.py, paper §3.1): M trainer threads
+step a shared ``StoreSlot`` and N sampler workers feed one bounded queue.
+Hook thread-safety contract: the runtime serializes ALL ``on_step`` calls
+under one lock and passes a monotone step counter, so hooks may keep plain
+mutable state (t0, histories, last-saved markers) without their own locks;
+``stats`` additionally carries ``trainer`` (which trainer stepped) and
+``queue_depth`` (sampler-queue backpressure).
 """
 
 from __future__ import annotations
@@ -38,7 +47,12 @@ class Hook:
 
 
 class LoggingHook(Hook):
-    """Periodic loss/throughput lines (and drop-rate when stats carry it)."""
+    """Periodic loss/throughput lines (and drop-rate when stats carry it).
+
+    Throughput is aggregate across trainers (the step counter is global);
+    under the multi-trainer runtime the line also reports how many trainers
+    contributed and the sampler-queue depth (backpressure diagnostic).
+    """
 
     def __init__(self, log_every: int = 100, batch_size: int = 0,
                  start: int = 0, print_fn: Callable[[str], None] = print):
@@ -49,6 +63,8 @@ class LoggingHook(Hook):
         self.t0 = None
         self.drops = 0
         self.saw_drops = False
+        self.trainers = set()
+        self.qdepth = None
 
     def on_step(self, i, state, metrics, stats):
         if self.t0 is None:
@@ -56,6 +72,10 @@ class LoggingHook(Hook):
         if stats and "dropped" in stats:
             self.saw_drops = True
             self.drops += stats["dropped"]
+        if stats and "trainer" in stats:
+            self.trainers.add(stats["trainer"])
+        if stats and "queue_depth" in stats:
+            self.qdepth = stats["queue_depth"]
         if i % self.log_every:
             return
         done = i - self.start
@@ -65,6 +85,8 @@ class LoggingHook(Hook):
             line += f", {done*self.batch_size/dt:9.0f} triplets/s"
             if self.saw_drops:
                 line += f", drop {self.drops/(done*self.batch_size):.2%}"
+        if len(self.trainers) > 1:
+            line += f", {len(self.trainers)} trainers, q={self.qdepth}"
         self.print_fn(line + ")")
 
 
@@ -104,13 +126,23 @@ class CheckpointHook(Hook):
 
 
 class EvalHook(Hook):
-    """Run ``eval_fn(state)`` once after the loop (ranks, MRR, ...)."""
+    """Run ``eval_fn(state)`` after the loop and, with ``eval_every``, also
+    periodically during training (MRR-vs-steps curves). The final eval is
+    skipped if a periodic eval already covered the final step."""
 
-    def __init__(self, eval_fn: Callable):
+    def __init__(self, eval_fn: Callable, eval_every: int = 0):
         self.eval_fn = eval_fn
+        self.eval_every = eval_every
+        self.last_eval = -1
+
+    def on_step(self, i, state, metrics, stats):
+        if self.eval_every and i % self.eval_every == 0:
+            self.eval_fn(state)
+            self.last_eval = i
 
     def on_end(self, i, state):
-        self.eval_fn(state)
+        if self.last_eval != i:
+            self.eval_fn(state)
 
 
 class MetricsHook(Hook):
@@ -126,7 +158,13 @@ class MetricsHook(Hook):
 
 
 class ThroughputHook(Hook):
-    """One end-of-run throughput line (serve / benchmark loops)."""
+    """One end-of-run throughput line (serve / benchmark loops).
+
+    The clock starts at the *first step* (like ``LoggingHook``), so jit
+    compile / setup time between construction and the loop no longer
+    pollutes the reported rate. Aggregates across trainers when run under
+    the multi-trainer runtime.
+    """
 
     def __init__(self, items_per_step: int = 1, label: str = "steps",
                  start: int = 0, print_fn: Callable[[str], None] = print):
@@ -134,13 +172,24 @@ class ThroughputHook(Hook):
         self.label = label
         self.start = start
         self.print_fn = print_fn
-        self.t0 = time.time()
+        self.t0 = None
+        self.trainers = set()
+
+    def on_step(self, i, state, metrics, stats):
+        if self.t0 is None:
+            self.t0 = time.time()
+        if stats and "trainer" in stats:
+            self.trainers.add(stats["trainer"])
 
     def on_end(self, i, state):
-        dt = max(time.time() - self.t0, 1e-9)
+        t0 = self.t0 if self.t0 is not None else time.time()
+        dt = max(time.time() - t0, 1e-9)
         n = i - self.start
-        self.print_fn(f"{n} steps in {dt:.2f}s -> "
-                      f"{n * self.items_per_step / dt:.1f} {self.label}/s")
+        line = (f"{n} steps in {dt:.2f}s -> "
+                f"{n * self.items_per_step / dt:.1f} {self.label}/s")
+        if len(self.trainers) > 1:
+            line += f" (across {len(self.trainers)} trainers)"
+        self.print_fn(line)
 
 
 def _finish(i: int, state, hooks):
@@ -152,12 +201,28 @@ def _finish(i: int, state, hooks):
 
 
 def train_loop(step_fn, state, make_batch, n_steps: int, *, start: int = 0,
-               hooks: Sequence[Hook] = (), prefetch: bool = True):
+               hooks: Sequence[Hook] = (), prefetch: bool = True,
+               n_trainers: int = 1, n_samplers: int = 1,
+               sampler_factory=None, split_step=None):
     """Drive ``step_fn`` from ``start`` (exclusive) to ``n_steps``.
 
     make_batch() -> (batch, stats); stats may be None. With ``prefetch``
     batches are produced one step ahead on a host thread.
+
+    ``n_trainers``/``n_samplers`` > 1 switch to the Hogwild multi-trainer
+    runtime (launch/runtime.py): ``sampler_factory(worker_id)`` builds one
+    sample callable per sampler worker (required for n_samplers > 1), and
+    ``split_step=(grad_fn, apply_fn)`` enables stale-gradient Hogwild steps
+    (see ``runtime.hogwild_train_loop``; without it the whole ``step_fn`` is
+    swapped atomically).
     """
+    if n_trainers > 1 or n_samplers > 1:
+        from repro.launch.runtime import hogwild_train_loop
+
+        return hogwild_train_loop(
+            step_fn, state, make_batch, n_steps, start=start, hooks=hooks,
+            n_trainers=n_trainers, n_samplers=n_samplers,
+            sampler_factory=sampler_factory, split_step=split_step)
     if start >= n_steps:
         return _finish(start, state, hooks)
     src = Prefetcher(make_batch) if prefetch else iter(make_batch, object())

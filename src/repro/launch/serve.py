@@ -51,7 +51,9 @@ def main():
 
     # prefill + generate through the shared engine loop (prefill_step exists
     # for the batch path; the serving loop here feeds the prompt token by
-    # token to fill the caches, then greedy-decodes)
+    # token to fill the caches, then greedy-decodes). ThroughputHook starts
+    # its clock at the first step, so the reported tok/s measures steady
+    # serving throughput — jit compile time is excluded.
     out = []
 
     def decode_step(i, carry):

@@ -4,6 +4,10 @@ Single-machine (many-core) mode:
     PYTHONPATH=src python -m repro.launch.train --dataset fb15k --model transe_l2 \
         --steps 2000 --scale 0.2 --eval
 
+Hogwild multi-trainer / multi-sampler (paper §3.1/§3.3, launch/runtime.py):
+    PYTHONPATH=src python -m repro.launch.train --dataset fb15k \
+        --trainers 4 --samplers 4 --steps 2000
+
 Distributed mode (SPMD over a CPU mesh here; the same program runs on the
 production mesh):
     PYTHONPATH=src python -m repro.launch.train --dataset fb15k --distributed \
@@ -16,6 +20,22 @@ All of the paper's techniques are switchable:
     --no-overlap                  (T5 off — applies to BOTH modes now that
                                    the single-machine path supports overlap)
     --use-kernel                  (Pallas kge_score)
+    --trainers N                  (§3.1 Hogwild trainers per machine; in the
+                                   single-machine joint path each trainer
+                                   computes gradients against a possibly
+                                   stale shared store and applies them to the
+                                   latest one; in naive/distributed modes
+                                   trainers share the whole-step StoreSlot
+                                   swap — overlapping sampling and hook work)
+    --samplers N                  (§3.3 sampler workers feeding one bounded
+                                   batch queue, each with its own RNG stream)
+    --eval-every K                (periodic filtered MRR during training,
+                                   single-machine mode; also enables the
+                                   final eval)
+
+Multi-trainer disables T5 overlap (Hogwild already overlaps updates with
+compute; the deferred buffers are single-writer by design — see the contract
+in embeddings/store.py).
 
 Both modes run through launch/engine.train_loop — the mode only decides the
 step function, the sampler, and the store backend (see core/step.py).
@@ -42,6 +62,12 @@ def main():
                     help="synthetic graph scale vs the paper's dataset")
     ap.add_argument("--eval", action="store_true")
     ap.add_argument("--eval-n", type=int, default=2000)
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="periodic eval every K steps (single-machine mode)")
+    ap.add_argument("--trainers", type=int, default=1,
+                    help="Hogwild trainer threads per machine (paper §3.1)")
+    ap.add_argument("--samplers", type=int, default=1,
+                    help="sampler worker threads (paper §3.3)")
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--mesh", default="4x2", help="data x model, e.g. 4x2")
     ap.add_argument("--partitioner", default="metis", choices=["metis", "random"])
@@ -70,6 +96,9 @@ def main():
     )
     if args.dim:
         upd["dim"] = args.dim
+        # the dataset config already materialized rel_dim from its own dim;
+        # 0 re-derives it from the overridden dim (transr overrides below)
+        upd["rel_dim"] = 0
     if args.batch_size:
         upd["batch_size"] = args.batch_size
     if args.neg:
@@ -111,29 +140,49 @@ def _train_single(args, cfg, kg, pairwise_fn):
     from repro.common.checkpoint import latest_step, restore_checkpoint
     from repro.core import eval as E
     from repro.core.kge_model import (
-        batch_to_device, flush_state, init_state, make_train_step,
-        naive_train_step,
+        batch_to_device, flush_state, init_state, make_hogwild_step,
+        make_train_step, naive_train_step,
     )
     from repro.core.sampling import JointSampler, NaiveSampler
+    from repro.data.pipeline import worker_rngs
     from repro.launch.engine import (
         CheckpointHook, EvalHook, LoggingHook, train_loop,
     )
 
     rng = np.random.default_rng(args.seed)
+    hogwild = args.trainers > 1
     # T5 overlap on the single-machine path (joint mode only: the naive
-    # strawman keeps immediate updates, matching the paper's baseline)
-    overlap = cfg.overlap_update and args.neg_mode == "joint"
+    # strawman keeps immediate updates, matching the paper's baseline).
+    # Hogwild replaces it — see the store.py contract.
+    overlap = cfg.overlap_update and args.neg_mode == "joint" and not hogwild
+    if hogwild and cfg.overlap_update and args.neg_mode == "joint":
+        print(f"{args.trainers} trainers: T5 overlap off "
+              "(Hogwild already overlaps updates with compute)")
     state = init_state(cfg, jax.random.key(args.seed), overlap=overlap)
+    split_step = None
     if args.neg_mode == "joint":
-        sampler = JointSampler(kg.train, cfg.n_entities, cfg, rng)
+        def make_sampler(r):
+            return JointSampler(kg.train, cfg.n_entities, cfg, r)
+
         step = make_train_step(cfg, pairwise_fn)
+        if hogwild:  # stale-gradient two-phase step (paper §3.1)
+            split_step = make_hogwild_step(cfg, pairwise_fn)
         to_dev = batch_to_device
     else:
-        sampler = NaiveSampler(kg.train, cfg.n_entities, cfg, rng)
+        def make_sampler(r):
+            return NaiveSampler(kg.train, cfg.n_entities, cfg, r)
+
         step = jax.jit(functools.partial(naive_train_step, cfg))
         to_dev = lambda b: {
             "h": jnp.asarray(b.h, jnp.int32), "r": jnp.asarray(b.r, jnp.int32),
             "t": jnp.asarray(b.t, jnp.int32), "neg": jnp.asarray(b.neg, jnp.int32)}
+    sampler = make_sampler(rng)
+    samplers = [make_sampler(r)
+                for r in worker_rngs(args.seed, max(1, args.samplers))]
+
+    def sampler_factory(wid):
+        s = samplers[wid]
+        return lambda: (to_dev(s.sample()), None)
 
     start = 0
     if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
@@ -159,11 +208,13 @@ def _train_single(args, cfg, kg, pairwise_fn):
             ranks = E.ranks_protocol2(cfg, state, test, kg.degrees().astype(np.float64))
         print("eval:", E.metrics_from_ranks(ranks))
 
-    if args.eval:
-        hooks.append(EvalHook(evaluate))
+    if args.eval or args.eval_every:
+        hooks.append(EvalHook(evaluate, eval_every=args.eval_every))
 
     train_loop(step, state, lambda: (to_dev(sampler.sample()), None),
-               args.steps, start=start, hooks=hooks)
+               args.steps, start=start, hooks=hooks,
+               n_trainers=args.trainers, n_samplers=args.samplers,
+               sampler_factory=sampler_factory, split_step=split_step)
 
 
 def _train_distributed(args, cfg, kg, pairwise_fn):
@@ -178,6 +229,7 @@ def _train_distributed(args, cfg, kg, pairwise_fn):
     from repro.core.graph_part import cut_fraction, partition
     from repro.core.rel_part import relation_partition
     from repro.core.sampling import DistSampler
+    from repro.data.pipeline import worker_rngs
     from repro.launch.engine import CheckpointHook, LoggingHook, train_loop
     from repro.launch.mesh import make_mesh
 
@@ -209,17 +261,30 @@ def _train_distributed(args, cfg, kg, pairwise_fn):
             state = jax.device_put(
                 init_dist_state(prog, jax.random.key(args.seed)), state_sh)
 
-        def make_batch():
-            db = sampler.sample()
-            batch = {k: jax.device_put(jnp.asarray(getattr(db, k)), batch_sh[k])
-                     for k in batch_sh}
-            return batch, db.stats
+        def batch_fn(s):
+            def make():
+                db = s.sample()
+                batch = {k: jax.device_put(jnp.asarray(getattr(db, k)),
+                                           batch_sh[k]) for k in batch_sh}
+                return batch, db.stats
+            return make
+
+        # per-worker DistSamplers with independent RNG streams (§3.3);
+        # multi-trainer here uses the whole-step StoreSlot swap (the
+        # shard_map step is one fused collective program — trainers overlap
+        # sampling, device_put, and hook work, not the collectives)
+        samplers = ([sampler] if args.samplers <= 1 else
+                    [DistSampler(kg.train, book, rp, cfg, r)
+                     for r in worker_rngs(args.seed, args.samplers)])
 
         hooks = [LoggingHook(args.log_every,
                              batch_size=cfg.batch_size * n_parts, start=start)]
         if args.ckpt_dir:
             hooks.append(CheckpointHook(args.ckpt_dir, args.save_every))
-        train_loop(step, state, make_batch, args.steps, start=start, hooks=hooks)
+        train_loop(step, state, batch_fn(sampler), args.steps, start=start,
+                   hooks=hooks, n_trainers=args.trainers,
+                   n_samplers=args.samplers,
+                   sampler_factory=lambda wid: batch_fn(samplers[wid]))
     print("done")
 
 

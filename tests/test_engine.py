@@ -3,8 +3,11 @@
 Pure-host tests (no jax): step_fn is a counter, batches are tokens.
 """
 
+import time
+
 from repro.launch.engine import (
-    CheckpointHook, Hook, LoggingHook, MetricsHook, run_loop, train_loop,
+    CheckpointHook, EvalHook, Hook, LoggingHook, MetricsHook, ThroughputHook,
+    run_loop, train_loop,
 )
 
 
@@ -113,3 +116,58 @@ def test_train_loop_prefetches():
     """The default prefetching path produces identical results."""
     state = train_loop(_count_step, 0, _batches, 6)
     assert state == 6
+
+
+def test_eval_hook_periodic_and_final():
+    evals = []
+    hook = EvalHook(lambda state: evals.append(state), eval_every=2)
+    train_loop(_count_step, 0, _batches, 5, hooks=[hook], prefetch=False)
+    assert evals == [2, 4, 5]  # steps 2, 4 periodic + final at 5
+
+
+def test_eval_hook_skips_duplicate_final_eval():
+    evals = []
+    hook = EvalHook(lambda state: evals.append(state), eval_every=2)
+    train_loop(_count_step, 0, _batches, 4, hooks=[hook], prefetch=False)
+    assert evals == [2, 4]  # periodic eval at 4 already covered the end
+
+
+def test_eval_hook_default_is_final_only():
+    evals = []
+    hook = EvalHook(lambda state: evals.append(state))
+    train_loop(_count_step, 0, _batches, 5, hooks=[hook], prefetch=False)
+    assert evals == [5]
+
+
+def test_throughput_hook_clock_starts_at_first_step():
+    """Setup time between construction and the loop (e.g. jit compile) must
+    not pollute the reported rate."""
+    lines = []
+    hook = ThroughputHook(items_per_step=10, label="tok", print_fn=lines.append)
+    assert hook.t0 is None
+    time.sleep(0.25)  # "compile time" before the first step
+    run_loop(lambda i, s: (s + 1, {"loss": 0.0}), 0, 4, hooks=[hook])
+    assert len(lines) == 1
+    rate = float(lines[0].split("-> ")[1].split(" ")[0])
+    # 4 steps of ~0s each: with a lazy t0 the rate is huge; with the old
+    # construction-time t0 it would be bounded by ~4*10/0.25 = 160 tok/s
+    assert rate > 1000
+
+
+def test_logging_hook_reports_trainer_count():
+    """Fed multi-trainer stats (as the Hogwild runtime emits them), the log
+    line reports how many trainers contributed and the queue depth."""
+    lines = []
+    lh = LoggingHook(log_every=4, print_fn=lines.append)
+    for i in range(1, 5):
+        lh.on_step(i, i, {"loss": 0.0},
+                   {"trainer": i % 2, "queue_depth": 3})
+    assert lines and "2 trainers" in lines[0] and "q=3" in lines[0]
+
+
+def test_train_loop_multi_trainer_pure_host():
+    """train_loop transparently delegates to the Hogwild runtime."""
+    mh = MetricsHook()
+    state = train_loop(_count_step, 0, _batches, 12, hooks=[mh], n_trainers=3)
+    assert state == 12
+    assert len(mh.history["loss"]) == 12

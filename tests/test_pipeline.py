@@ -4,7 +4,9 @@ import threading
 import time
 import warnings
 
-from repro.data.pipeline import Prefetcher
+import numpy as np
+
+from repro.data.pipeline import Prefetcher, WorkerPool, worker_rngs
 
 
 def test_prefetch_yields_batches_in_order():
@@ -44,3 +46,112 @@ def test_close_warns_on_hung_producer():
     release.set()
     pf.thread.join(timeout=2.0)
     assert not pf.thread.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# WorkerPool (multi-producer) — paper §3.3 sampler workers
+# ---------------------------------------------------------------------------
+def test_worker_pool_never_drops_a_batch_under_full_queue():
+    """Slow consumer + tiny queue: every worker's sequence must arrive
+    contiguous — a producer that resamples on queue.Full would skip values."""
+    counters = {}
+
+    def factory(wid):
+        counters[wid] = iter(range(10_000))
+
+        def sample(c=counters[wid], w=wid):
+            return (w, next(c))
+        return sample
+
+    pool = WorkerPool(factory, n_workers=3, depth=1)
+    seen = {}
+    for _ in range(60):
+        wid, seq = pool.get(timeout=2.0)
+        seen.setdefault(wid, []).append(seq)
+        time.sleep(0.002)  # keep the queue full so producers hit backpressure
+    pool.close()
+    for wid, seqs in seen.items():
+        assert seqs == list(range(seqs[0], seqs[0] + len(seqs))), \
+            f"worker {wid} dropped a batch: {seqs}"
+
+
+def test_worker_rngs_deterministic_and_independent():
+    a = [r.integers(0, 2**63, 100).tolist() for r in worker_rngs(0, 4)]
+    b = [r.integers(0, 2**63, 100).tolist() for r in worker_rngs(0, 4)]
+    assert a == b  # deterministic given (seed, n, worker index)
+    flat = [tuple(s) for s in a]
+    assert len(set(flat)) == 4  # streams are distinct
+    # and distinct from a different seed
+    c = [r.integers(0, 2**63, 100).tolist() for r in worker_rngs(1, 4)]
+    assert all(x != y for x, y in zip(a, c))
+
+
+def test_worker_pool_sampler_streams_do_not_interleave_shared_rng():
+    """Each worker owns its Generator; pooled output is a permutation of the
+    union of the per-worker streams computed offline."""
+    n, per = 3, 12
+
+    def factory(wid, rngs=worker_rngs(7, n)):
+        r = rngs[wid]
+        return lambda: (wid, int(r.integers(0, 2**31)))
+
+    pool = WorkerPool(factory, n_workers=n, depth=2)
+    got = {}
+    for _ in range(n * per):
+        wid, v = pool.get(timeout=2.0)
+        got.setdefault(wid, []).append(v)
+    pool.close()
+    expect = {wid: [int(r.integers(0, 2**31)) for _ in range(10_000)]
+              for wid, r in enumerate(worker_rngs(7, n))}
+    for wid, vals in got.items():
+        assert vals == expect[wid][:len(vals)]
+
+
+def test_worker_pool_close_joins_all_workers_cleanly():
+    pool = WorkerPool(lambda wid: (lambda: 0), n_workers=4, depth=1)
+    time.sleep(0.2)  # all four producers have filled the queue / block in put
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any shutdown warning = failure
+        pool.close()
+    assert not any(t.is_alive() for t in pool.threads)
+
+
+def test_worker_pool_stats_track_backpressure():
+    pool = WorkerPool(lambda wid: (lambda: 0), n_workers=2, depth=1)
+    time.sleep(0.5)  # nobody consumes: producers block, wait accumulates
+    s = pool.stats()
+    assert s["queue_depth"] == 1
+    assert s["produced"] >= 1
+    assert s["producer_wait_s"] > 0.1
+    pool.close()
+
+    # slow producer: the consumer side accumulates wait instead
+    pool = WorkerPool(lambda wid: (lambda: time.sleep(0.05) or 0), depth=2)
+    for _ in range(3):
+        pool.get(timeout=2.0)
+    assert pool.stats()["consumer_wait_s"] > 0.0
+    pool.close()
+
+
+def test_worker_pool_rejects_zero_workers():
+    try:
+        WorkerPool(lambda wid: (lambda: 0), n_workers=0)
+    except ValueError as e:
+        assert "n_workers" in str(e)
+    else:
+        raise AssertionError("expected ValueError")
+
+
+def test_worker_pool_distinct_rngs_give_distinct_batches():
+    """End-to-end sanity for the train.py wiring: two workers sampling from
+    the same data with worker_rngs produce different index streams."""
+    data = np.arange(1000)
+
+    def factory(wid, rngs=worker_rngs(0, 2)):
+        r = rngs[wid]
+        return lambda: data[r.integers(0, len(data), 8)].tolist()
+
+    pool = WorkerPool(factory, n_workers=2, depth=4)
+    batches = [tuple(pool.get(timeout=2.0)) for _ in range(20)]
+    pool.close()
+    assert len(set(batches)) > 1
