@@ -19,6 +19,7 @@ Mapping (see DESIGN.md §6):
     fig7    bench_partitioning        METIS vs random (T3) + Table 7
     table5  bench_accuracy            per-model accuracy tables
     kernel  bench_kernels             T1 GEMM arithmetic intensity
+    sparse_adagrad bench_kernels      fused Adagrad kernel HBM traffic
     roofline bench_roofline           dry-run roofline table (pod scale)
     hogwild bench_hogwild             §3.1 multi-trainer triplets/s scaling
 """
@@ -51,6 +52,7 @@ def main() -> None:
         "capacity": bench_capacity.run,
         "table5": bench_accuracy.run,
         "kernel": bench_kernels.run,
+        "sparse_adagrad": bench_kernels.run_sparse_adagrad,
         "roofline": bench_roofline.run,
         "hogwild": bench_hogwild.run,
     }

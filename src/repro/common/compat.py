@@ -84,6 +84,39 @@ def interpret_kernels() -> bool:
     return backend() != "tpu"
 
 
+def has_scalar_prefetch() -> bool:
+    """Whether this JAX exposes the Pallas scalar-prefetch grid spec
+    (``PrefetchScalarGridSpec``) that the sparse-Adagrad kernels rely on.
+
+    The symbol has lived in ``jax.experimental.pallas.tpu`` across the whole
+    supported range but is on a deprecation path; probing here keeps the
+    kernel wrappers version-agnostic (they fall back to jnp when absent).
+    """
+    try:
+        pltpu = importlib.import_module(
+            f"{jax.__name__}.experimental.pallas.tpu")
+    except ImportError:
+        return False
+    return getattr(pltpu, "PrefetchScalarGridSpec", None) is not None
+
+
+def prefetch_scalar_grid_spec(*, num_scalar_prefetch: int, grid,
+                              in_specs, out_specs):
+    """Build a Pallas grid spec whose first ``num_scalar_prefetch`` operands
+    are scalar-prefetched (available to ``index_map`` and the kernel body
+    before the block pipeline runs) — the only version-sensitive Pallas
+    spelling the sparse-Adagrad kernels need, pinned here per the compat rule.
+    """
+    pltpu = importlib.import_module(f"{jax.__name__}.experimental.pallas.tpu")
+    cls = getattr(pltpu, "PrefetchScalarGridSpec", None)
+    if cls is None:
+        raise NotImplementedError(
+            "this JAX has no Pallas scalar-prefetch grid spec; run with the "
+            "jnp sparse-Adagrad path (use_kernel=False)")
+    return cls(num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+               in_specs=in_specs, out_specs=out_specs)
+
+
 # --------------------------------------------------------------------- meshes
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     """Build a device mesh portably.

@@ -67,8 +67,9 @@ from repro.embeddings.kvstore import (
 )
 from repro.optim.sparse_adagrad import (
     AdagradState,
-    segment_aggregate_rows,
-    sparse_adagrad_update_rows,
+    dedup_compact_rows,
+    dense_adagrad_update,
+    sparse_adagrad_apply,
 )
 
 Snapshot = Dict[str, jnp.ndarray]
@@ -94,10 +95,29 @@ def _empty_pending(width: int, slots: int = 0, dtype=jnp.float32):
 
 
 def _adagrad_rows(table, gsq, ids, grads, lr):
-    """Aggregate duplicate ids, then sparse-Adagrad the touched rows."""
-    uid, agg = segment_aggregate_rows(ids.astype(jnp.int32), grads, ids.shape[0])
-    new_table, st = sparse_adagrad_update_rows(table, AdagradState(gsq), uid, agg, lr)
-    return new_table, st.gsq
+    """Aggregate duplicate ids, then sparse-Adagrad the touched rows.
+
+    Delegates to ``optim.sparse_adagrad_apply``, which dispatches between the
+    jnp path and the fused Pallas kernel per its auto-probed ``use_kernel``
+    flag — stores and trainers never choose a path themselves.
+    """
+    return sparse_adagrad_apply(table, gsq, ids, grads, lr)
+
+
+def _park_pending(pend_ids, pend_grads, ids, grads):
+    """Stage one step's grads into the fixed pend buffer (T5 defer).
+
+    When the buffer matches the raw workspace size, parking is a passthrough
+    (the flush dedups anyway). A *smaller* buffer triggers the
+    capacity-bounded dedup-before-defer: duplicates are aggregated and the
+    unique rows compacted into ``pend_slots``, so deferred memory is bounded
+    by the expected unique count rather than the workspace size.
+    """
+    cap = pend_ids.shape[0]
+    if cap == ids.shape[0]:
+        return ids.astype(jnp.int32), grads.astype(pend_grads.dtype)
+    out_ids, out_grads, _ = dedup_compact_rows(ids, grads, cap)
+    return out_ids, out_grads.astype(pend_grads.dtype)
 
 
 # ===========================================================================
@@ -131,8 +151,8 @@ class DenseStore:
     def apply_sparse_grads(self, ids, grads) -> "DenseStore":
         if self.defer:
             # T5: park this step's grads; flush() applies them next step
-            return dataclasses.replace(
-                self, pend_ids=ids.astype(jnp.int32), pend_grads=grads)
+            pid, pg = _park_pending(self.pend_ids, self.pend_grads, ids, grads)
+            return dataclasses.replace(self, pend_ids=pid, pend_grads=pg)
         table, gsq = _adagrad_rows(self.table, self.gsq, ids, grads, self.lr)
         return dataclasses.replace(self, table=table, gsq=gsq)
 
@@ -208,8 +228,9 @@ class ShardedStore:
         all_ids = jnp.concatenate([ids.local, owner_ids]).astype(jnp.int32)
         all_grads = jnp.concatenate([g_local, owner_grads], axis=0)
         if self.defer:
-            return dataclasses.replace(self, pend_ids=all_ids,
-                                       pend_grads=all_grads)
+            pid, pg = _park_pending(self.pend_ids, self.pend_grads,
+                                    all_ids, all_grads)
+            return dataclasses.replace(self, pend_ids=pid, pend_grads=pg)
         table, gsq = _adagrad_rows(self.table, self.gsq, all_ids, all_grads,
                                    self.lr)
         return dataclasses.replace(self, table=table, gsq=gsq)
@@ -265,14 +286,22 @@ class ReplicatedStore:
         return self.table[jnp.maximum(ids, 0)]
 
     def apply_sparse_grads(self, ids, grads) -> "ReplicatedStore":
-        mask = (ids >= 0).reshape(ids.shape + (1,) * (grads.ndim - ids.ndim))
-        g = jnp.zeros_like(self.table).at[jnp.maximum(ids, 0)].add(
-            jnp.where(mask, grads, 0.0))
-        if self.machine_axis is not None:
-            g = jax.lax.psum(g, self.machine_axis)
-        gsq = self.gsq + jnp.square(g)
-        table = self.table - self.lr * g / (jnp.sqrt(gsq) + self.eps)
-        return dataclasses.replace(self, table=table, gsq=gsq)
+        flat_ids = ids.reshape(-1).astype(jnp.int32)
+        flat_grads = grads.reshape(flat_ids.shape[0], -1)
+        if self.machine_axis is None:
+            # local replica: the sparse path (untouched rows are exact
+            # no-ops, so numerics equal the dense scatter formulation)
+            table, gsq = sparse_adagrad_apply(
+                self.table, self.gsq, flat_ids, flat_grads, self.lr, self.eps)
+            return dataclasses.replace(self, table=table, gsq=gsq)
+        # cross-machine: the psum needs the dense full-table gradient
+        mask = (flat_ids >= 0)[:, None]
+        g = jnp.zeros_like(self.table).at[jnp.maximum(flat_ids, 0)].add(
+            jnp.where(mask, flat_grads, 0.0))
+        g = jax.lax.psum(g, self.machine_axis)
+        table, st = dense_adagrad_update(
+            self.table, AdagradState(self.gsq), g, self.lr, self.eps)
+        return dataclasses.replace(self, table=table, gsq=st.gsq)
 
     def flush(self) -> "ReplicatedStore":
         return self

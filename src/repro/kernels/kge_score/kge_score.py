@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _pairwise_kernel(o_ref, n_ref, out_ref, *, mode: str, n_d_tiles: int):
+def _pairwise_kernel(o_ref, n_ref, out_ref, *, mode: str):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -70,7 +70,7 @@ def pairwise_pallas(
     bm, bn, bk = min(bm, B), min(bn, K), min(bk, D)
     assert B % bm == 0 and K % bn == 0 and D % bk == 0
     grid = (B // bm, K // bn, D // bk)
-    kern = functools.partial(_pairwise_kernel, mode=mode, n_d_tiles=grid[2])
+    kern = functools.partial(_pairwise_kernel, mode=mode)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -88,7 +88,7 @@ def pairwise_pallas(
 # L1 backward kernels (no GEMM form; jnp would materialize (B, K, D) in HBM —
 # the exact data-movement blowup T1 exists to avoid).
 # ---------------------------------------------------------------------------
-def _l1_do_kernel(o_ref, n_ref, g_ref, out_ref, *, n_k_tiles: int):
+def _l1_do_kernel(o_ref, n_ref, g_ref, out_ref):
     j = pl.program_id(2)  # K tiles innermost (sequential accumulation)
 
     @pl.when(j == 0)
@@ -102,7 +102,7 @@ def _l1_do_kernel(o_ref, n_ref, g_ref, out_ref, *, n_k_tiles: int):
     out_ref[...] += jnp.einsum("mn,mnd->md", g, s)
 
 
-def _l1_dn_kernel(o_ref, n_ref, g_ref, out_ref, *, n_b_tiles: int):
+def _l1_dn_kernel(o_ref, n_ref, g_ref, out_ref):
     i = pl.program_id(2)  # B tiles innermost
 
     @pl.when(i == 0)
@@ -121,7 +121,7 @@ def l1_bwd_pallas(o, negs, g, *, bm=128, bn=128, bk=128, interpret=False):
     K, _ = negs.shape
     bm, bn, bk = min(bm, B), min(bn, K), min(bk, D)
     do = pl.pallas_call(
-        functools.partial(_l1_do_kernel, n_k_tiles=K // bn),
+        _l1_do_kernel,
         grid=(B // bm, D // bk, K // bn),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, d, j: (i, d)),
@@ -133,7 +133,7 @@ def l1_bwd_pallas(o, negs, g, *, bm=128, bn=128, bk=128, interpret=False):
         interpret=interpret,
     )(o, negs, g)
     dn = pl.pallas_call(
-        functools.partial(_l1_dn_kernel, n_b_tiles=B // bm),
+        _l1_dn_kernel,
         grid=(K // bn, D // bk, B // bm),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda j, d, i: (i, d)),

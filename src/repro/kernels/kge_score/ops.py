@@ -31,12 +31,14 @@ def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
 
 
 def _tiles(B: int, K: int, D: int, mode: str):
-    # MXU-aligned for GEMM modes; smaller D tiles for the VPU L1 path
+    # MXU-aligned for GEMM modes; smaller D tiles for the VPU L1 path.
+    # bk is capped at D's 128-aligned padding so a large cap never forces
+    # padding beyond one tile (e.g. D=300 pads to 384, not 512).
     bm = 128 if B >= 128 else max(8, 1 << (B - 1).bit_length())
     bn = 128 if K >= 128 else max(8, 1 << (K - 1).bit_length())
-    bk = (128 if mode == "l1" else 512)
-    bk = min(bk, 1 << max(3, (D - 1).bit_length()))
-    return bm, bn, bk
+    cap = 128 if mode == "l1" else 512
+    dp = max(8, 1 << (D - 1).bit_length()) if D < 128 else -(-D // 128) * 128
+    return bm, bn, min(cap, dp)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))

@@ -1,13 +1,19 @@
 from repro.optim.api import make_optimizer
 from repro.optim.sparse_adagrad import (
     sparse_adagrad_init,
+    sparse_adagrad_apply,
     sparse_adagrad_update_rows,
     dense_adagrad_update,
+    set_use_kernel,
+    use_kernel,
 )
 
 __all__ = [
     "make_optimizer",
     "sparse_adagrad_init",
+    "sparse_adagrad_apply",
     "sparse_adagrad_update_rows",
     "dense_adagrad_update",
+    "set_use_kernel",
+    "use_kernel",
 ]

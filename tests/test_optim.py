@@ -49,7 +49,7 @@ def test_segment_aggregate_property(n_ids, n_rows, d, seed):
     rng = np.random.default_rng(seed)
     ids = rng.integers(-1, n_rows, size=n_ids).astype(np.int32)
     grads = rng.standard_normal((n_ids, d)).astype(np.float32)
-    uid, agg = segment_aggregate_rows(jnp.asarray(ids), jnp.asarray(grads), n_rows)
+    uid, agg = segment_aggregate_rows(jnp.asarray(ids), jnp.asarray(grads))
     uid, agg = np.asarray(uid), np.asarray(agg)
     # reference aggregation
     want = {}
@@ -69,7 +69,7 @@ def test_duplicate_ids_aggregate_before_adagrad():
     state = sparse_adagrad_init(table)
     ids = jnp.array([1, 1], jnp.int32)
     grads = jnp.array([[1.0, 1.0], [1.0, 1.0]])
-    uid, agg = segment_aggregate_rows(ids, grads, 3)
+    uid, agg = segment_aggregate_rows(ids, grads)
     new, _ = sparse_adagrad_update_rows(table, state, uid, agg, lr=1.0)
     # aggregated grad = 2 -> step = 2/sqrt(4) = 1
     np.testing.assert_allclose(new[1], [-1.0, -1.0], rtol=1e-5)
