@@ -30,6 +30,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+from repro.common import telemetry
 from repro.common.config import KGEConfig
 from repro.core.kge_model import (
     batch_to_device, init_state, make_hogwild_step,
@@ -109,6 +110,38 @@ def _sim_accel(kg, cfg, steps):
     return out, t_sample, t_dev
 
 
+def _telemetry_overhead(kg, cfg, steps):
+    """Enabled-path telemetry cost on the instrumented runtime hot loop.
+
+    Same fixed-latency sim-accel shape as ``_sim_accel`` but with a device
+    latency small enough that the host-side per-step work (sampling,
+    WorkerPool hand-off, StoreSlot swap — where every telemetry call site
+    lives) dominates, making this an upper bound on the real overhead.
+    Disabled telemetry is the baseline; the instrumented modules are always
+    imported, so its cost (one attribute check per site) is already in it.
+    """
+    t_dev = 0.0005
+
+    def grad_fn(state, batch):
+        time.sleep(t_dev)
+        return 0, {"loss": 0.0}
+
+    def apply_fn(state, batch, grads):
+        return state + 1
+
+    def rate():
+        kw = dict(step_fn=None, state=0, make_batch=None,
+                  split_step=(grad_fn, apply_fn), n_trainers=2, n_samplers=2,
+                  sampler_factory=_factory(kg, cfg, 2))
+        return _run(kw, steps, cfg.batch_size)
+
+    rate()  # warmup (thread pools, sampler caches)
+    rate_off = rate()
+    with telemetry.active(trace=True):
+        rate_on = rate()
+    return rate_off, rate_on
+
+
 def run():
     fast = os.environ.get("BENCH_FAST", "1") == "1"
     kg = fb15k_like(scale=0.2 if fast else 1.0, seed=0)
@@ -138,6 +171,13 @@ def run():
         emit(f"hogwild/host_cpu/trainers{n}", 1e6 / max(host[n], 1e-9),
              f"{host[n]:,.0f} triplets/s; {extra}"
              "needs spare cores to exceed 1x (see module docstring)")
+
+    rate_off, rate_on = _telemetry_overhead(kg, cfg, steps)
+    overhead = max(0.0, rate_off / max(rate_on, 1e-9) - 1.0)
+    emit("hogwild/telemetry_overhead", overhead * 100.0,
+         f"enabled(trace) vs disabled on the instrumented hot loop: "
+         f"{rate_off:,.0f} -> {rate_on:,.0f} triplets/s "
+         f"({overhead*100:.1f}% slower; budget <5%)")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_loop
-from repro.common import compat
+from repro.common import compat, telemetry
 from repro.core.scores import pairwise_scores
 from repro.optim.sparse_adagrad import sparse_adagrad_apply
 
@@ -94,23 +94,27 @@ def run_sparse_adagrad():
          f"analytic_bytes={bytes_fused:.3g} bytes_ratio={ratio:.1f}x "
          f"(interpret wall-clock not meaningful)")
 
-    out = {
-        "shape": {"n_rows": N, "dim": D, "batch_ids": n, "unique_ids": u},
-        "jnp_path": {
-            "us_per_call": t_jnp,
-            "rows_per_s": rows_s,
-            "hbm_bytes_measured": bytes_jnp,
-            "hbm_bytes_analytic_aliased": bytes_jnp_alias,
-            "hbm_bytes_analytic_copy": bytes_jnp_copy,
-        },
-        "fused_kernel": {"hbm_bytes_analytic": bytes_fused},
+    # one flat gauge per number, snapshot schema shared with --metrics-out
+    # (docs/TELEMETRY.md); a dedicated registry so a concurrently-enabled
+    # process registry doesn't leak unrelated metrics into the file
+    reg = telemetry.MetricsRegistry(enabled=True)
+    for key, val in {
+        "jnp_us_per_call": t_jnp,
+        "jnp_rows_per_s": rows_s,
+        "jnp_hbm_bytes_measured": bytes_jnp,
+        "jnp_hbm_bytes_analytic_aliased": bytes_jnp_alias,
+        "jnp_hbm_bytes_analytic_copy": bytes_jnp_copy,
+        "fused_hbm_bytes_analytic": bytes_fused,
         "fused_vs_jnp_bytes_ratio": ratio,
         "fused_vs_jnp_bytes_ratio_aliased_lower_bound":
             bytes_jnp_alias / bytes_fused,
-        "note": "Pallas interpret-mode wall-clock on CPU is an emulator; "
-                "the TPU-relevant comparison is HBM traffic. ratio > 1 "
-                "means the fused kernel moves fewer bytes per step.",
-    }
+    }.items():
+        reg.gauge(f"bench/sparse_adagrad/{key}", val)
+    out = reg.snapshot(
+        shape={"n_rows": N, "dim": D, "batch_ids": n, "unique_ids": u},
+        note="Pallas interpret-mode wall-clock on CPU is an emulator; "
+             "the TPU-relevant comparison is HBM traffic. ratio > 1 "
+             "means the fused kernel moves fewer bytes per step.")
     root = pathlib.Path(__file__).resolve().parent.parent
     (root / "BENCH_sparse_adagrad.json").write_text(
         json.dumps(out, indent=2) + "\n")

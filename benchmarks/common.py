@@ -1,4 +1,8 @@
-"""Shared benchmark helpers: timing, CSV rows, small fixtures."""
+"""Shared benchmark helpers: timing, CSV rows, small fixtures.
+
+Every ``emit`` also lands in the telemetry registry as a ``bench/<name>``
+gauge, so ``benchmarks.run`` can dump all suite numbers in the same
+snapshot schema as ``--metrics-out`` (see docs/TELEMETRY.md)."""
 
 from __future__ import annotations
 
@@ -7,12 +11,15 @@ from typing import Callable, List
 
 import numpy as np
 
+from repro.common import telemetry
+
 ROWS: List[str] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    telemetry.gauge(f"bench/{name}", us_per_call)
     print(row, flush=True)
 
 

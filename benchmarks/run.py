@@ -8,8 +8,11 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--full]
 
-Prints ``name,us_per_call,derived`` CSV per the repo convention.
-Set BENCH_FAST=0 (or --full) for paper-scale accuracy runs.
+Prints ``name,us_per_call,derived`` CSV per the repo convention, and writes
+``BENCH_RESULTS.json`` at the repo root — a telemetry snapshot (same schema
+as ``--metrics-out`` lines, docs/TELEMETRY.md) holding every emitted row as
+a ``bench/<name>`` gauge. Set BENCH_FAST=0 (or --full) for paper-scale
+accuracy runs.
 
 Mapping (see DESIGN.md §6):
     fig3    bench_negative_sampling   joint vs naive sampling (T1)
@@ -25,6 +28,8 @@ Mapping (see DESIGN.md §6):
 """
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 
@@ -36,6 +41,10 @@ def main() -> None:
     args = ap.parse_args()
     if args.full:
         os.environ["BENCH_FAST"] = "0"
+
+    from repro.common import telemetry
+
+    telemetry.enable()
 
     from benchmarks import (
         bench_accuracy, bench_capacity, bench_degree_negatives, bench_hogwild,
@@ -65,6 +74,11 @@ def main() -> None:
         except Exception as e:  # keep the harness running
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_RESULTS.json"
+    out.write_text(json.dumps(
+        telemetry.snapshot(suites=wanted), indent=2) + "\n")
+    print(f"# wrote {out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -258,6 +258,10 @@ def build_dist_train_step(prog: DistKGEProgram, mesh: Mesh, pairwise_fn=None):
         "rel_shared": P(maxis, None),
     }
     metric_specs = {"loss": P(), "pos_score": P(), "neg_score": P()}
+    if cfg.overlap_update:
+        # store_train_step adds the T5 defer drop-count metric when the
+        # entity store defers (same static condition as the store build)
+        metric_specs["pend_dropped"] = P()
 
     body = functools.partial(_device_step, prog, maxis, pairwise_fn=pairwise_fn,
                              n_servers=int(mesh.shape["model"]))

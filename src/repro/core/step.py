@@ -44,6 +44,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common import telemetry
 from repro.common.config import KGEConfig
 from repro.core import losses as L
 from repro.core import scores as S
@@ -227,14 +228,31 @@ def store_train_step(
 
     The composition flush → ``store_grads`` → ``store_apply_grads`` on one
     store set (grads applied to the stores they were computed against).
+
+    Phase boundaries are telemetry spans. Under jit they bracket *tracing*
+    (this Python runs once, when the step is traced), so they appear once in
+    the timeline as the trace-time cost of each phase; in eager execution
+    (tests, debugging) they time the real phases every call.
+
+    When the entity store defers (T5), ``metrics["pend_dropped"]`` reports
+    the store's capacity-bounded defer drop count — updates silently lost
+    under pend-buffer pressure become a visible metric (and a warn-once log
+    in ``launch/engine.LoggingHook``).
     """
     # ---- 1. flush deferred updates (T5) before gathering
     stores = dict(stores)
-    stores["entity"] = stores["entity"].flush()
-    grads, metrics = store_grads(
-        cfg, stores, batch, neg_mode=neg_mode, ctx=ctx, n_servers=n_servers,
-        pairwise_fn=pairwise_fn)
-    new_stores = store_apply_grads(stores, batch, grads)
+    with telemetry.span("step/flush"):
+        stores["entity"] = stores["entity"].flush()
+    with telemetry.span("step/grad"):
+        grads, metrics = store_grads(
+            cfg, stores, batch, neg_mode=neg_mode, ctx=ctx,
+            n_servers=n_servers, pairwise_fn=pairwise_fn)
+    with telemetry.span("step/apply"):
+        new_stores = store_apply_grads(stores, batch, grads)
+    ent = new_stores["entity"]
+    if getattr(ent, "defer", False) and getattr(ent, "pend_dropped", None) is not None:
+        metrics = dict(metrics,
+                       pend_dropped=ent.pend_dropped.astype(jnp.float32))
     if machine_axis is not None:
         metrics = {name: jax.lax.pmean(v, machine_axis)
                    for name, v in metrics.items()}

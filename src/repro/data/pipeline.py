@@ -11,7 +11,11 @@ NEVER discarded — when the queue is full the producer holds the batch and
 retries the put, so a slow consumer costs producer *waiting*, not wasted
 sampling work. ``stats()`` exposes the three backpressure signals (queue
 depth, cumulative producer wait, cumulative consumer wait) that say which
-side of the pipeline is the bottleneck.
+side of the pipeline is the bottleneck. The same signals are mirrored into
+the process telemetry registry (``pipeline/*`` — common/telemetry.py) when
+it is enabled, and each producer's ``sample_fn`` call is a ``pipeline/sample``
+span on that worker's own trace track. Wait accounting uses
+``time.perf_counter`` (monotonic — wall-clock jumps never corrupt rates).
 
 ``Prefetcher`` (the original single-producer, double-buffered prefetcher) is
 the ``n_workers=1`` special case and keeps its historical constructor.
@@ -27,7 +31,13 @@ from typing import Callable, Iterator, List, Optional
 
 import numpy as np
 
+from repro.common import telemetry
+
 _NOTHING = object()  # "no batch held" sentinel for the producer retry loop
+
+# telemetry counter names keyed by the internal wait attribute
+_WAIT_METRIC = {"_producer_wait": "pipeline/producer_wait_s",
+                "_consumer_wait": "pipeline/consumer_wait_s"}
 
 
 def worker_rngs(seed: int, n: int) -> List[np.random.Generator]:
@@ -75,14 +85,15 @@ class WorkerPool:
         held = _NOTHING
         while not self._stop.is_set():
             if held is _NOTHING:
-                held = sample_fn()
+                with telemetry.span("pipeline/sample"):
+                    held = sample_fn()
             try:
                 # fast path: space available, no wait accounted
                 self.q.put_nowait(held)
             except queue.Full:
                 # backpressure: hold the batch and retry — re-running
                 # sample_fn here would silently discard sampled work
-                t0 = time.monotonic()
+                t0 = time.perf_counter()
                 try:
                     self.q.put(held, timeout=0.2)
                 except queue.Full:
@@ -92,11 +103,14 @@ class WorkerPool:
             held = _NOTHING
             with self._stat_lock:
                 self._produced += 1
+            telemetry.inc("pipeline/produced")
+            telemetry.gauge("pipeline/queue_depth", self.q.qsize())
 
     def _add_wait(self, attr: str, t0: float):
-        dt = time.monotonic() - t0
+        dt = time.perf_counter() - t0
         with self._stat_lock:
             setattr(self, attr, getattr(self, attr) + dt)
+        telemetry.inc(_WAIT_METRIC[attr], dt)
 
     # ---- consumer side -----------------------------------------------------
     def get(self, timeout: Optional[float] = None):
@@ -104,7 +118,7 @@ class WorkerPool:
         try:
             return self.q.get_nowait()
         except queue.Empty:
-            t0 = time.monotonic()
+            t0 = time.perf_counter()
             try:
                 return self.q.get(timeout=timeout)
             finally:

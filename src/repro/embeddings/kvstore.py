@@ -19,6 +19,11 @@ All functions below run *inside* ``compat.shard_map`` with:
 
 Padding convention: id == -1 is an empty slot; its pulled row is zeroed and
 its pushed gradient is dropped.
+
+Comm accounting: every pull/push records its static per-machine per-step
+row and ICI-byte volume into the telemetry registry via
+``telemetry.trace_inc`` (the shapes are fixed, so the numbers are exact and
+cost nothing in the compiled program — see common/telemetry.py).
 """
 
 from __future__ import annotations
@@ -28,7 +33,7 @@ from typing import Tuple, Union
 
 import jax.numpy as jnp
 
-from repro.common import compat
+from repro.common import compat, telemetry
 
 AxisName = Union[str, Tuple[str, ...], None]
 
@@ -63,8 +68,15 @@ def _gather_rows(block: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     return jnp.where((ids >= 0).reshape(ids.shape + (1,) * (rows.ndim - ids.ndim)), rows, 0.0)
 
 
+def _wire_bytes(req: jnp.ndarray, d: int, spec: KVStoreSpec) -> int:
+    """ICI bytes for one capacity-bounded round trip: the int32 request ids
+    plus the row payload in the wire dtype. Static — shapes are fixed."""
+    return req.size * (4 + d * jnp.dtype(spec.comm_dtype).itemsize)
+
+
 def pull_local(block: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     """Shared-memory fast path: ids index this machine's row block."""
+    telemetry.trace_inc("kvstore/local_rows", ids.size)
     return _gather_rows(block, ids)
 
 
@@ -80,6 +92,12 @@ def pull_remote(
     returns: (n_parts * Rp, d_shard) the fetched rows, zeros at pads.
     """
     ax = spec.machine_axis
+    # comm accounting (per machine per step; request slots include pads —
+    # the capacity-bounded a2a always moves the full buffer)
+    telemetry.trace_inc("kvstore/pull_rows", req.size)
+    if ax is not None:
+        telemetry.trace_inc("kvstore/pull_bytes",
+                            _wire_bytes(req, block.shape[-1], spec))
     if ax is None:
         # degenerate single-machine KVStore: the only peer is ourselves
         rows = spec.wire(_gather_rows(block, req))
@@ -105,6 +123,10 @@ def push_remote_grads(
              matching gradient rows. Apply with sparse Adagrad.
     """
     ax = spec.machine_axis
+    telemetry.trace_inc("kvstore/push_rows", req.size)
+    if ax is not None:
+        telemetry.trace_inc("kvstore/push_bytes",
+                            _wire_bytes(req, grads.shape[-1], spec))
     if ax is None:
         # degenerate single-machine KVStore: grads already sit on the owner
         g = spec.wire(grads).astype(grads.dtype)

@@ -59,6 +59,7 @@ from typing import Dict, NamedTuple, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.common import telemetry
 from repro.embeddings.kvstore import (
     KVStoreSpec,
     pull_local,
@@ -112,12 +113,19 @@ def _park_pending(pend_ids, pend_grads, ids, grads):
     capacity-bounded dedup-before-defer: duplicates are aggregated and the
     unique rows compacted into ``pend_slots``, so deferred memory is bounded
     by the expected unique count rather than the workspace size.
+
+    Returns ``(ids, grads, n_dropped)``: uniques beyond capacity are dropped
+    (their updates are LOST) — callers accumulate ``n_dropped`` into the
+    store's ``pend_dropped`` so the loss is observable, not silent (it
+    surfaces as the ``pend_dropped`` step metric and a warn-once log; see
+    launch/engine.py and docs/TELEMETRY.md).
     """
     cap = pend_ids.shape[0]
     if cap == ids.shape[0]:
-        return ids.astype(jnp.int32), grads.astype(pend_grads.dtype)
-    out_ids, out_grads, _ = dedup_compact_rows(ids, grads, cap)
-    return out_ids, out_grads.astype(pend_grads.dtype)
+        return (ids.astype(jnp.int32), grads.astype(pend_grads.dtype),
+                jnp.zeros((), jnp.int32))
+    out_ids, out_grads, n_dropped = dedup_compact_rows(ids, grads, cap)
+    return out_ids, out_grads.astype(pend_grads.dtype), n_dropped
 
 
 # ===========================================================================
@@ -136,6 +144,11 @@ class DenseStore:
     pend_grads: jnp.ndarray  # (Lp, d)
     lr: float = 0.1  # static
     defer: bool = False  # static
+    # uniques dropped by the capacity-bounded defer over this store's
+    # lifetime (adapters rebuild stores each step, so there it reads as the
+    # per-step drop count) — surfaced as the ``pend_dropped`` step metric
+    pend_dropped: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.zeros((), jnp.int32))
 
     @classmethod
     def create(cls, table: jnp.ndarray, lr: float, defer: bool = False,
@@ -151,14 +164,17 @@ class DenseStore:
     def apply_sparse_grads(self, ids, grads) -> "DenseStore":
         if self.defer:
             # T5: park this step's grads; flush() applies them next step
-            pid, pg = _park_pending(self.pend_ids, self.pend_grads, ids, grads)
-            return dataclasses.replace(self, pend_ids=pid, pend_grads=pg)
+            pid, pg, nd = _park_pending(self.pend_ids, self.pend_grads,
+                                        ids, grads)
+            return dataclasses.replace(self, pend_ids=pid, pend_grads=pg,
+                                       pend_dropped=self.pend_dropped + nd)
         table, gsq = _adagrad_rows(self.table, self.gsq, ids, grads, self.lr)
         return dataclasses.replace(self, table=table, gsq=gsq)
 
     def flush(self) -> "DenseStore":
         if self.pend_ids.shape[0] == 0:
             return self
+        telemetry.inc("store/flush_calls")
         table, gsq = _adagrad_rows(self.table, self.gsq, self.pend_ids,
                                    self.pend_grads, self.lr)
         pid, pg = (jnp.full_like(self.pend_ids, -1),
@@ -176,7 +192,7 @@ class DenseStore:
 
 jax.tree_util.register_dataclass(
     DenseStore,
-    data_fields=["table", "gsq", "pend_ids", "pend_grads"],
+    data_fields=["table", "gsq", "pend_ids", "pend_grads", "pend_dropped"],
     meta_fields=["lr", "defer"],
 )
 
@@ -205,6 +221,9 @@ class ShardedStore:
     spec: KVStoreSpec = KVStoreSpec(None, 1, 1)  # static
     lr: float = 0.1  # static
     defer: bool = False  # static
+    # lifetime drop count of the capacity-bounded defer (see DenseStore)
+    pend_dropped: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.zeros((), jnp.int32))
 
     @classmethod
     def create(cls, table: jnp.ndarray, spec: KVStoreSpec, lr: float,
@@ -228,9 +247,10 @@ class ShardedStore:
         all_ids = jnp.concatenate([ids.local, owner_ids]).astype(jnp.int32)
         all_grads = jnp.concatenate([g_local, owner_grads], axis=0)
         if self.defer:
-            pid, pg = _park_pending(self.pend_ids, self.pend_grads,
-                                    all_ids, all_grads)
-            return dataclasses.replace(self, pend_ids=pid, pend_grads=pg)
+            pid, pg, nd = _park_pending(self.pend_ids, self.pend_grads,
+                                        all_ids, all_grads)
+            return dataclasses.replace(self, pend_ids=pid, pend_grads=pg,
+                                       pend_dropped=self.pend_dropped + nd)
         table, gsq = _adagrad_rows(self.table, self.gsq, all_ids, all_grads,
                                    self.lr)
         return dataclasses.replace(self, table=table, gsq=gsq)
@@ -238,6 +258,7 @@ class ShardedStore:
     def flush(self) -> "ShardedStore":
         if self.pend_ids.shape[0] == 0:
             return self
+        telemetry.inc("store/flush_calls")
         table, gsq = _adagrad_rows(self.table, self.gsq, self.pend_ids,
                                    self.pend_grads, self.lr)
         pid, pg = (jnp.full_like(self.pend_ids, -1),
@@ -255,7 +276,7 @@ class ShardedStore:
 
 jax.tree_util.register_dataclass(
     ShardedStore,
-    data_fields=["table", "gsq", "pend_ids", "pend_grads"],
+    data_fields=["table", "gsq", "pend_ids", "pend_grads", "pend_dropped"],
     meta_fields=["spec", "lr", "defer"],
 )
 

@@ -15,6 +15,10 @@ step via ``run_loop``.
 
 Hooks see every step *after* it is issued: ``on_step(i, state, metrics,
 stats)`` with ``i`` the 1-based step number, then ``on_end(i, state)`` once.
+``TelemetryHook`` is the observability surface: it folds step metrics,
+sampler stats, and trace-time comm statics into the process metrics
+registry (common/telemetry.py) and emits JSONL snapshots / Chrome traces
+(``--metrics-out`` / ``--trace-out`` in train.py and serve.py).
 ``on_end`` may return a replacement state (e.g. a flushed one); ``None``
 keeps the current state.
 
@@ -30,9 +34,12 @@ mutable state (t0, histories, last-saved markers) without their own locks;
 
 from __future__ import annotations
 
+import json
 import time
+import warnings
 from typing import Callable, Optional, Sequence
 
+from repro.common import telemetry
 from repro.data.pipeline import Prefetcher
 
 
@@ -52,6 +59,12 @@ class LoggingHook(Hook):
     Throughput is aggregate across trainers (the step counter is global);
     under the multi-trainer runtime the line also reports how many trainers
     contributed and the sampler-queue depth (backpressure diagnostic).
+
+    Rates use ``time.perf_counter`` (monotonic) — a wall-clock adjustment
+    mid-run can no longer corrupt them. If the step metrics carry
+    ``pend_dropped`` > 0 (capacity-bounded T5 defer losing updates), the
+    first occurrence raises a one-shot ``RuntimeWarning`` and the count is
+    appended to every log line from then on.
     """
 
     def __init__(self, log_every: int = 100, batch_size: int = 0,
@@ -65,10 +78,12 @@ class LoggingHook(Hook):
         self.saw_drops = False
         self.trainers = set()
         self.qdepth = None
+        self.pend_dropped = 0.0
+        self._warned_pend = False
 
     def on_step(self, i, state, metrics, stats):
         if self.t0 is None:
-            self.t0 = time.time()
+            self.t0 = time.perf_counter()
         if stats and "dropped" in stats:
             self.saw_drops = True
             self.drops += stats["dropped"]
@@ -79,7 +94,7 @@ class LoggingHook(Hook):
         if i % self.log_every:
             return
         done = i - self.start
-        dt = max(time.time() - self.t0, 1e-9)
+        dt = max(time.perf_counter() - self.t0, 1e-9)
         line = f"step {i:6d} loss {float(metrics['loss']):8.4f} ({done/dt:6.1f} steps/s"
         if self.batch_size:
             line += f", {done*self.batch_size/dt:9.0f} triplets/s"
@@ -87,6 +102,18 @@ class LoggingHook(Hook):
                 line += f", drop {self.drops/(done*self.batch_size):.2%}"
         if len(self.trainers) > 1:
             line += f", {len(self.trainers)} trainers, q={self.qdepth}"
+        if "pend_dropped" in metrics:
+            self.pend_dropped = float(metrics["pend_dropped"])
+            if self.pend_dropped > 0 and not self._warned_pend:
+                self._warned_pend = True
+                warnings.warn(
+                    f"deferred-update pend buffer overflowed: "
+                    f"{self.pend_dropped:.0f} unique rows dropped by step {i} "
+                    "— their gradient updates are LOST. Increase pend_slots "
+                    "(or remote_capacity) to relieve capacity pressure.",
+                    RuntimeWarning, stacklevel=2)
+            if self.pend_dropped > 0:
+                line += f", pend_drop {self.pend_dropped:.0f}"
         self.print_fn(line + ")")
 
 
@@ -146,7 +173,13 @@ class EvalHook(Hook):
 
 
 class MetricsHook(Hook):
-    """Record scalar metrics per step — used by tests and benchmarks."""
+    """Record scalar metrics per step — used by tests and benchmarks.
+
+    A key absent from a step's metrics (e.g. apply-phase metrics under the
+    split two-phase path, or a conditional metric like ``pend_dropped``)
+    records ``nan`` for that step, keeping every history aligned with the
+    step counter instead of raising ``KeyError``.
+    """
 
     def __init__(self, keys: Sequence[str] = ("loss",)):
         self.keys = tuple(keys)
@@ -154,7 +187,8 @@ class MetricsHook(Hook):
 
     def on_step(self, i, state, metrics, stats):
         for k in self.keys:
-            self.history[k].append(float(metrics[k]))
+            v = None if metrics is None else metrics.get(k)
+            self.history[k].append(float("nan") if v is None else float(v))
 
 
 class ThroughputHook(Hook):
@@ -177,19 +211,110 @@ class ThroughputHook(Hook):
 
     def on_step(self, i, state, metrics, stats):
         if self.t0 is None:
-            self.t0 = time.time()
+            self.t0 = time.perf_counter()
         if stats and "trainer" in stats:
             self.trainers.add(stats["trainer"])
 
     def on_end(self, i, state):
-        t0 = self.t0 if self.t0 is not None else time.time()
-        dt = max(time.time() - t0, 1e-9)
+        t0 = self.t0 if self.t0 is not None else time.perf_counter()
+        dt = max(time.perf_counter() - t0, 1e-9)
         n = i - self.start
         line = (f"{n} steps in {dt:.2f}s -> "
                 f"{n * self.items_per_step / dt:.1f} {self.label}/s")
         if len(self.trainers) > 1:
             line += f" (across {len(self.trainers)} trainers)"
         self.print_fn(line)
+
+
+class TelemetryHook(Hook):
+    """Bridge the step loop into the telemetry registry + JSONL/trace files.
+
+    Every step (cheap, host-side only — no device sync):
+      * ``engine/steps`` counter;
+      * sampler ``stats`` folded in (``pipeline/queue_depth`` gauge,
+        ``sampler/dropped`` counter);
+      * trace-time statics (``telemetry.trace_inc`` from kvstore etc.)
+        drained and replayed as sticky per-step gauges (``<name>_per_step``)
+        plus accumulating counters (``<name>``).
+
+    Every ``every`` steps (the snapshot cadence — this is where device
+    values are materialized, so keep ``every`` ≳ log cadence):
+      * scalar step metrics recorded as ``step/<key>`` gauges (missing keys
+        skipped, never KeyError);
+      * ``store/pend_dropped`` counter bumped from the sampled
+        ``pend_dropped`` metric (a lower bound at coarse cadences);
+      * one JSONL snapshot line appended to ``metrics_out``.
+
+    ``on_end`` writes a final snapshot and, with ``trace_out``, the Chrome
+    trace-event file (Perfetto-loadable). Inert when telemetry is disabled.
+    Thread-safety: the runtime serializes hook calls, and the registry's own
+    lock covers the counters, so one instance serves N trainers.
+    """
+
+    _METRIC_KEYS = ("loss", "pos_score", "neg_score", "pend_dropped")
+
+    def __init__(self, metrics_out: Optional[str] = None,
+                 trace_out: Optional[str] = None, every: int = 50):
+        self.metrics_out = metrics_out
+        self.trace_out = trace_out
+        self.every = max(1, every)
+        self._file = None
+        self._per_step = {}
+        self._last_pend = 0.0
+
+    def _snapshot(self, i, metrics):
+        reg = telemetry.get_registry()
+        if metrics:
+            for k in self._METRIC_KEYS:
+                v = metrics.get(k)
+                if v is not None:
+                    reg.gauge(f"step/{k}", float(v))
+            pend = metrics.get("pend_dropped")
+            if pend is not None:
+                pend = float(pend)
+                # the metric is cumulative over the (per-step rebuilt) store;
+                # accumulate the sampled values — exact at every=1, a lower
+                # bound at coarser cadences (docs/TELEMETRY.md)
+                reg.inc("store/pend_dropped", max(0.0, pend))
+        if self.metrics_out:
+            if self._file is None:
+                self._file = open(self.metrics_out, "w")
+            self._file.write(json.dumps(reg.snapshot(step=i)) + "\n")
+            self._file.flush()
+
+    def on_step(self, i, state, metrics, stats):
+        reg = telemetry.get_registry()
+        if not reg.enabled:
+            return
+        reg.inc("engine/steps")
+        if stats:
+            if "queue_depth" in stats:
+                reg.gauge("pipeline/queue_depth", stats["queue_depth"])
+            if "dropped" in stats:
+                reg.inc("sampler/dropped", stats["dropped"])
+        drained = reg.drain_statics()
+        if drained:
+            # new trace (first step after compile, or a re-trace): the
+            # drained statics are the per-step volumes from here on
+            self._per_step.update(drained)
+        for name, v in self._per_step.items():
+            reg.gauge(f"{name}_per_step", v)
+            reg.inc(name, v)
+        if i % self.every == 0:
+            self._snapshot(i, metrics)
+
+    def on_end(self, i, state):
+        reg = telemetry.get_registry()
+        if not reg.enabled:
+            return None
+        if i % self.every != 0:  # final snapshot not already written
+            self._snapshot(i, None)
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+        if self.trace_out:
+            reg.write_trace(self.trace_out)
+        return None
 
 
 def _finish(i: int, state, hooks):
@@ -229,7 +354,8 @@ def train_loop(step_fn, state, make_batch, n_steps: int, *, start: int = 0,
     i = start
     try:
         for i, (batch, stats) in zip(range(start + 1, n_steps + 1), src):
-            state, metrics = step_fn(state, batch)
+            with telemetry.span("engine/step"):
+                state, metrics = step_fn(state, batch)
             for h in hooks:
                 h.on_step(i, state, metrics, stats)
     finally:
@@ -244,7 +370,8 @@ def run_loop(step_fn, state, n_steps: int, *, start: int = 0,
     0-based step index — serve decode loops, synthetic benchmark loops."""
     i = start
     for i in range(start + 1, n_steps + 1):
-        state, metrics = step_fn(i - 1, state)
+        with telemetry.span("engine/step"):
+            state, metrics = step_fn(i - 1, state)
         for h in hooks:
             h.on_step(i, state, metrics, stats=None)
     return _finish(i, state, hooks)

@@ -45,6 +45,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Optional, Sequence, Tuple
 
+from repro.common import telemetry
 from repro.data.pipeline import WorkerPool
 from repro.launch.engine import _finish
 
@@ -151,21 +152,35 @@ def hogwild_train_loop(
     grad_fn, apply_fn = split_step if split_step is not None else (None, None)
 
     def trainer(tid: int):
+        # one trace track per trainer (trainer 0 runs on the caller's thread,
+        # whose thread name would otherwise label the track)
+        telemetry.set_track_name(f"trainer-{tid}")
         try:
             if tid != 0:
                 while not first_done.wait(0.1):
                     if stop.is_set():
                         return
             while not stop.is_set() and todo.claim():
-                batch_stats = _get(pool, stop)
+                with telemetry.span("runtime/wait_batch"):
+                    batch_stats = _get(pool, stop)
                 if batch_stats is None:  # shut down while waiting for a batch
                     todo.unclaim()
                     return
                 batch, stats = batch_stats
                 if grad_fn is not None:
-                    # Hogwild two-phase: grads vs stale read, apply to latest
-                    grads, metrics = grad_fn(slot.read(), batch)
-                    new = slot.swap(lambda cur: apply_fn(cur, batch, grads))
+                    # Hogwild two-phase: grads vs stale read, apply to latest.
+                    # Staleness accounting: how many other trainers' swaps
+                    # landed between our read and our apply (the published
+                    # versions our gradients did NOT see).
+                    v_read = slot.version
+                    with telemetry.span("runtime/grad"):
+                        grads, metrics = grad_fn(slot.read(), batch)
+                    with telemetry.span("runtime/apply"):
+                        new = slot.swap(lambda cur: apply_fn(cur, batch, grads))
+                    stale = slot.version - v_read - 1
+                    if stale > 0:
+                        telemetry.inc("runtime/stale_steps")
+                        telemetry.observe("runtime/staleness", stale)
                 else:
                     # whole-step swap: read-latest -> step -> publish
                     box = [None]
@@ -175,16 +190,19 @@ def hogwild_train_loop(
                         box[0] = m
                         return out
 
-                    new = slot.swap(chained)
+                    with telemetry.span("runtime/step"):
+                        new = slot.swap(chained)
                     metrics = box[0]
+                telemetry.inc("runtime/steps")
                 with hook_lock:
                     done[0] += 1
                     i = done[0]
                     st = dict(stats) if stats else {}
                     st.setdefault("trainer", tid)
                     st.setdefault("queue_depth", pool.q.qsize())
-                    for h in hooks:
-                        h.on_step(i, new, metrics, st)
+                    with telemetry.span("runtime/hooks"):
+                        for h in hooks:
+                            h.on_step(i, new, metrics, st)
                 first_done.set()
         except BaseException as e:  # propagate to the caller, release peers
             errors.append(e)

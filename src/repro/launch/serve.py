@@ -21,15 +21,25 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--full", action="store_true", help="full (not reduced) config")
+    ap.add_argument("--metrics-out", default="",
+                    help="append JSONL telemetry snapshots here "
+                         "(schema: docs/TELEMETRY.md)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON here (Perfetto)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.metrics_out or args.trace_out:
+        from repro.common import telemetry
+
+        telemetry.enable(trace=bool(args.trace_out))
 
     import jax
     import jax.numpy as jnp
 
     from repro.common import compat
     from repro.configs import get_arch
-    from repro.launch.engine import ThroughputHook, run_loop
+    from repro.launch.engine import TelemetryHook, ThroughputHook, run_loop
     from repro.models.transformer import build_model
 
     cfg = get_arch(args.arch)
@@ -67,9 +77,13 @@ def main():
         return (logits, caches), {}
 
     steps = T + args.gen
+    hooks = [ThroughputHook(items_per_step=B, label="tok")]
+    if args.metrics_out or args.trace_out:
+        hooks.append(TelemetryHook(metrics_out=args.metrics_out or None,
+                                   trace_out=args.trace_out or None,
+                                   every=16))
     logits, _ = run_loop(
-        decode_step, (None, caches), steps,
-        hooks=[ThroughputHook(items_per_step=B, label="tok")])
+        decode_step, (None, caches), steps, hooks=hooks)
     gen = np.concatenate(out, axis=1)
     print(f"arch={cfg.name} reduced={not args.full} batch={B}")
     print(f"generated tokens:\n{gen}")

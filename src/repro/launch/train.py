@@ -75,11 +75,22 @@ def main():
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--remote-capacity", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=100)
+    ap.add_argument("--metrics-out", default="",
+                    help="append JSONL telemetry snapshots here "
+                         "(schema: docs/TELEMETRY.md)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON here "
+                         "(load in Perfetto; one track per trainer/sampler)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--save-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.metrics_out or args.trace_out:
+        from repro.common import telemetry
+
+        telemetry.enable(trace=bool(args.trace_out))
 
     from repro.configs import KGE_DATASETS
     from repro.data.kg_synth import fb15k_like, freebase_like, wn18_like
@@ -146,7 +157,7 @@ def _train_single(args, cfg, kg, pairwise_fn):
     from repro.core.sampling import JointSampler, NaiveSampler
     from repro.data.pipeline import worker_rngs
     from repro.launch.engine import (
-        CheckpointHook, EvalHook, LoggingHook, train_loop,
+        CheckpointHook, EvalHook, LoggingHook, TelemetryHook, train_loop,
     )
 
     rng = np.random.default_rng(args.seed)
@@ -194,6 +205,10 @@ def _train_single(args, cfg, kg, pairwise_fn):
 
     flush = functools.partial(flush_state, cfg)
     hooks = [LoggingHook(args.log_every, batch_size=cfg.batch_size, start=start)]
+    if args.metrics_out or args.trace_out:
+        hooks.append(TelemetryHook(metrics_out=args.metrics_out or None,
+                                   trace_out=args.trace_out or None,
+                                   every=max(1, args.log_every)))
     if args.ckpt_dir:
         hooks.append(CheckpointHook(args.ckpt_dir, args.save_every,
                                     flush_fn=flush))
@@ -230,7 +245,9 @@ def _train_distributed(args, cfg, kg, pairwise_fn):
     from repro.core.rel_part import relation_partition
     from repro.core.sampling import DistSampler
     from repro.data.pipeline import worker_rngs
-    from repro.launch.engine import CheckpointHook, LoggingHook, train_loop
+    from repro.launch.engine import (
+        CheckpointHook, LoggingHook, TelemetryHook, train_loop,
+    )
     from repro.launch.mesh import make_mesh
 
     dshape = tuple(int(x) for x in args.mesh.split("x"))
@@ -279,6 +296,10 @@ def _train_distributed(args, cfg, kg, pairwise_fn):
 
         hooks = [LoggingHook(args.log_every,
                              batch_size=cfg.batch_size * n_parts, start=start)]
+        if args.metrics_out or args.trace_out:
+            hooks.append(TelemetryHook(metrics_out=args.metrics_out or None,
+                                       trace_out=args.trace_out or None,
+                                       every=max(1, args.log_every)))
         if args.ckpt_dir:
             hooks.append(CheckpointHook(args.ckpt_dir, args.save_every))
         train_loop(step, state, batch_fn(sampler), args.steps, start=start,

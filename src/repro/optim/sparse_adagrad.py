@@ -34,7 +34,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.common import compat
+from repro.common import compat, telemetry
 
 
 class AdagradState(NamedTuple):
@@ -196,12 +196,16 @@ def sparse_adagrad_apply(
     """
     ids = ids.astype(jnp.int32)
     if _resolve(use_kernel):
+        # dispatch decisions happen at trace time — the counters say which
+        # path each traced step function took (docs/TELEMETRY.md)
+        telemetry.inc("optim/dispatch_fused")
         from repro.kernels.sparse_adagrad import (
             dedup_aggregate, fused_sparse_adagrad,
         )
 
         uid, agg = dedup_aggregate(ids, grads)
         return fused_sparse_adagrad(table, gsq, uid, agg, lr, eps)
+    telemetry.inc("optim/dispatch_jnp")
     uid, agg = segment_aggregate_rows(ids, grads)
     new_table, st = sparse_adagrad_update_rows(
         table, AdagradState(gsq), uid, agg, lr, eps)

@@ -133,6 +133,58 @@ def test_worker_pool_stats_track_backpressure():
     pool.close()
 
 
+def test_worker_pool_stats_consistent_under_contention():
+    """stats() hammered from a second thread while producers and a consumer
+    race: every snapshot is complete, ``produced`` is monotone, and waits
+    never decrease — no torn reads or exceptions under the stat lock."""
+    pool = WorkerPool(lambda wid: (lambda: 0), n_workers=4, depth=2)
+    snaps, errors = [], []
+
+    def hammer():
+        try:
+            for _ in range(300):
+                snaps.append(pool.stats())
+        except Exception as e:  # pragma: no cover - the failure being tested
+            errors.append(e)
+
+    th = threading.Thread(target=hammer)
+    th.start()
+    for _ in range(100):
+        pool.get(timeout=2.0)
+    th.join()
+    snaps.append(pool.stats())  # final snapshot after all 100 gets
+    pool.close()
+    assert not errors
+    for s in snaps:
+        assert set(s) == {"queue_depth", "produced", "producer_wait_s",
+                          "consumer_wait_s"}
+    for a, b in zip(snaps, snaps[1:]):
+        assert b["produced"] >= a["produced"]
+        assert b["producer_wait_s"] >= a["producer_wait_s"] - 1e-12
+        assert b["consumer_wait_s"] >= a["consumer_wait_s"] - 1e-12
+    # the 100 gets all came from puts; each producer may still be between
+    # its put and its counter increment, so allow one in-flight per worker
+    assert snaps[-1]["produced"] >= 100 - 4
+
+
+def test_worker_pool_mirrors_stats_into_telemetry():
+    """With the registry enabled, pipeline counters track stats(): after a
+    quiescent point, produced and the waits agree between the two surfaces."""
+    from repro.common import telemetry
+
+    with telemetry.active() as reg:
+        pool = WorkerPool(lambda wid: (lambda: 0), n_workers=2, depth=2)
+        for _ in range(40):
+            pool.get(timeout=2.0)
+        pool.close()  # joins producers: both surfaces are final
+        s = pool.stats()
+        assert reg.counters["pipeline/produced"] == s["produced"]
+        assert abs(reg.counters.get("pipeline/producer_wait_s", 0.0)
+                   - s["producer_wait_s"]) < 1e-6
+        assert abs(reg.counters.get("pipeline/consumer_wait_s", 0.0)
+                   - s["consumer_wait_s"]) < 1e-6
+
+
 def test_worker_pool_rejects_zero_workers():
     try:
         WorkerPool(lambda wid: (lambda: 0), n_workers=0)

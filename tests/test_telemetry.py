@@ -1,0 +1,276 @@
+"""Telemetry stack: registry thread-safety, trace schema, TelemetryHook
+JSONL output, Hogwild per-trainer tracks, and pend-overflow surfacing."""
+
+import json
+import threading
+import warnings
+
+import jax.numpy as jnp
+
+from repro.common import telemetry
+from repro.common.telemetry import (
+    MetricsRegistry, validate_metrics_jsonl, validate_trace,
+)
+from repro.embeddings.store import DenseStore
+from repro.launch.engine import (
+    LoggingHook, MetricsHook, TelemetryHook, train_loop,
+)
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry
+# ---------------------------------------------------------------------------
+def test_registry_counters_exact_under_contention():
+    reg = MetricsRegistry(enabled=True)
+    n_threads, n_incs = 8, 2000
+
+    def worker():
+        for _ in range(n_incs):
+            reg.inc("pipeline/produced")
+            reg.observe("runtime/staleness", 1.0)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert reg.counters["pipeline/produced"] == n_threads * n_incs
+    snap = reg.snapshot()
+    h = snap["hists"]["runtime/staleness"]
+    assert h["count"] == n_threads * n_incs
+    assert h["mean"] == 1.0
+
+
+def test_disabled_registry_records_nothing():
+    reg = MetricsRegistry(enabled=False)
+    reg.inc("pipeline/produced")
+    reg.gauge("pipeline/queue_depth", 3)
+    reg.observe("runtime/staleness", 1.0)
+    reg.trace_inc("kvstore/pull_rows", 64)
+    assert reg.counters == {} and reg.gauges == {}
+    assert reg.snapshot()["hists"] == {}
+    assert reg.drain_statics() == {}
+    # disabled spans are the shared no-op singleton — no per-call allocation
+    assert reg.span("x") is reg.span("y") is telemetry._NULL_SPAN
+
+
+def test_module_helpers_default_disabled_and_active_restores():
+    assert not telemetry.enabled()
+    telemetry.inc("pipeline/produced")  # no-op, must not raise
+    with telemetry.active() as reg:
+        assert telemetry.enabled()
+        telemetry.inc("pipeline/produced")
+        assert reg.counters["pipeline/produced"] == 1
+    assert not telemetry.enabled()
+
+
+def test_trace_inc_buffers_until_drained():
+    reg = MetricsRegistry(enabled=True)
+    reg.trace_inc("kvstore/pull_rows", 64)
+    reg.trace_inc("kvstore/pull_rows", 64)
+    assert "kvstore/pull_rows" not in reg.counters  # buffered, not recorded
+    assert reg.drain_statics() == {"kvstore/pull_rows": 128.0}
+    assert reg.drain_statics() == {}
+
+
+def test_span_trace_roundtrip(tmp_path):
+    reg = MetricsRegistry(enabled=True, trace=True)
+    reg.set_track_name("trainer-0")
+    with reg.span("runtime/grad"):
+        pass
+    with reg.span("runtime/apply"):
+        pass
+    path = tmp_path / "t.json"
+    reg.write_trace(str(path))
+    assert validate_trace(str(path)) >= 3  # 2 spans + 1 track metadata
+    doc = json.loads(path.read_text())
+    names = {e["name"] for e in doc["traceEvents"] if e.get("ph") == "X"}
+    assert names == {"runtime/grad", "runtime/apply"}
+    tracks = {e["args"]["name"] for e in doc["traceEvents"]
+              if e.get("ph") == "M"}
+    assert "trainer-0" in tracks
+
+
+def test_trace_event_cap_counts_drops(tmp_path):
+    reg = MetricsRegistry(enabled=True, trace=True, max_events=3)
+    for _ in range(10):
+        with reg.span("engine/step"):
+            pass
+    assert len(reg.trace_json()["traceEvents"]) == 4  # 3 spans + metadata
+    assert reg.counters["telemetry/trace_events_dropped"] == 7
+
+
+# ---------------------------------------------------------------------------
+# schema validators (the CI smoke leg's teeth)
+# ---------------------------------------------------------------------------
+def _write_jsonl(path, recs):
+    path.write_text("".join(json.dumps(r) + "\n" for r in recs))
+
+
+def _rec(step, counters, gauges=None):
+    return {"ts": 0.0, "uptime_s": float(step), "counters": counters,
+            "gauges": gauges or {}, "hists": {}, "step": step}
+
+
+def test_validator_accepts_known_and_rejects_unknown_names(tmp_path):
+    p = tmp_path / "m.jsonl"
+    _write_jsonl(p, [_rec(1, {"engine/steps": 1.0}, {"bench/anything": 2.0})])
+    assert validate_metrics_jsonl(str(p)) == 1
+
+    _write_jsonl(p, [_rec(1, {"engine/steps": 1.0, "engine/stepz": 1.0})])
+    try:
+        validate_metrics_jsonl(str(p))
+    except ValueError as e:
+        assert "engine/stepz" in str(e)
+    else:
+        raise AssertionError("unknown metric name must fail validation")
+
+
+def test_validator_rejects_decreasing_counters_and_missing_required(tmp_path):
+    p = tmp_path / "m.jsonl"
+    _write_jsonl(p, [_rec(1, {"engine/steps": 5.0}),
+                     _rec(2, {"engine/steps": 3.0})])
+    try:
+        validate_metrics_jsonl(str(p))
+    except ValueError as e:
+        assert "decreased" in str(e)
+    else:
+        raise AssertionError("non-monotone counter must fail validation")
+
+    _write_jsonl(p, [_rec(1, {"pipeline/produced": 1.0})])
+    try:
+        validate_metrics_jsonl(str(p))
+    except ValueError as e:
+        assert "engine/steps" in str(e)
+    else:
+        raise AssertionError("missing required counter must fail validation")
+
+
+def test_known_metrics_cover_instrumentation_sites():
+    # grep-level safety net: names used by the instrumented modules must be
+    # documented (KNOWN_METRICS is the schema CI validates against)
+    for name in ("pipeline/produced", "pipeline/producer_wait_s",
+                 "pipeline/consumer_wait_s", "pipeline/queue_depth",
+                 "runtime/steps", "runtime/stale_steps", "runtime/staleness",
+                 "store/flush_calls", "store/pend_dropped",
+                 "kvstore/pull_bytes", "kvstore/push_bytes",
+                 "optim/dispatch_fused", "optim/dispatch_jnp",
+                 "engine/steps", "step/loss", "step/pend_dropped"):
+        assert name in telemetry.KNOWN_METRICS, name
+
+
+# ---------------------------------------------------------------------------
+# TelemetryHook through the engine loop
+# ---------------------------------------------------------------------------
+def _fake_step(state, batch):
+    return state + 1, {"loss": 0.5, "pos_score": 1.0, "neg_score": -1.0}
+
+
+def test_telemetry_hook_writes_valid_jsonl_and_trace(tmp_path):
+    mpath, tpath = tmp_path / "m.jsonl", tmp_path / "t.json"
+    with telemetry.active(trace=True) as reg:
+        # statics discovered "at trace time" before the first step completes
+        telemetry.trace_inc("kvstore/pull_rows", 64)
+        telemetry.trace_inc("kvstore/pull_bytes", 1024)
+        hook = TelemetryHook(metrics_out=str(mpath), trace_out=str(tpath),
+                             every=4)
+        train_loop(_fake_step, 0, lambda: (None, {"queue_depth": 3}),
+                   n_steps=10, hooks=[hook], prefetch=False)
+        assert reg.counters["engine/steps"] == 10
+        # statics replayed every step: counter = per-step * steps
+        assert reg.counters["kvstore/pull_rows"] == 64 * 10
+        assert reg.gauges["kvstore/pull_rows_per_step"] == 64
+        assert reg.counters["kvstore/pull_bytes"] == 1024 * 10
+    n = validate_metrics_jsonl(str(mpath))
+    assert n >= 3  # steps 4, 8, final 10
+    recs = [json.loads(line) for line in mpath.read_text().splitlines()]
+    assert [r["step"] for r in recs] == [4, 8, 10]
+    steps = [r["counters"]["engine/steps"] for r in recs]
+    assert steps == sorted(steps) == [4.0, 8.0, 10.0]
+    assert recs[0]["gauges"]["step/loss"] == 0.5
+    assert validate_trace(str(tpath)) > 0
+
+
+def test_telemetry_hook_inert_when_disabled(tmp_path):
+    mpath = tmp_path / "m.jsonl"
+    hook = TelemetryHook(metrics_out=str(mpath), every=2)
+    train_loop(_fake_step, 0, lambda: (None, None), n_steps=6,
+               hooks=[hook], prefetch=False)
+    assert not mpath.exists()  # no registry enabled -> no file, no error
+
+
+def test_hogwild_per_trainer_tracks_and_exact_step_counts(tmp_path):
+    def grad_fn(state, batch):
+        return 0, {"loss": 0.0}
+
+    def apply_fn(state, batch, grads):
+        return state + 1
+
+    n_steps, n_trainers = 30, 3
+    tpath = tmp_path / "t.json"
+    with telemetry.active(trace=True) as reg:
+        hook = TelemetryHook(trace_out=str(tpath), every=10)
+        state = train_loop(
+            None, 0, None, n_steps, hooks=[hook],
+            n_trainers=n_trainers, n_samplers=2,
+            sampler_factory=lambda wid: (lambda: ((), None)),
+            split_step=(grad_fn, apply_fn))
+        assert state == n_steps  # every step's apply landed exactly once
+        assert reg.counters["runtime/steps"] == n_steps
+        assert reg.counters["engine/steps"] == n_steps
+    validate_trace(str(tpath))
+    doc = json.loads(tpath.read_text())
+    tracks = {e["args"]["name"] for e in doc["traceEvents"]
+              if e.get("ph") == "M"}
+    for tid in range(n_trainers):
+        assert f"trainer-{tid}" in tracks, tracks
+    # every trainer's grad/apply phases appear as spans on some track
+    names = {e["name"] for e in doc["traceEvents"] if e.get("ph") == "X"}
+    assert {"runtime/grad", "runtime/apply", "runtime/wait_batch"} <= names
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes: MetricsHook nan, pend-overflow surfacing
+# ---------------------------------------------------------------------------
+def test_metrics_hook_records_nan_for_missing_keys():
+    import math
+
+    hook = MetricsHook(keys=("loss", "pend_dropped"))
+    hook.on_step(1, None, {"loss": 1.0}, None)  # no pend_dropped
+    hook.on_step(2, None, {"loss": 2.0, "pend_dropped": 3.0}, None)
+    hook.on_step(3, None, None, None)  # apply-phase step: no metrics at all
+    assert hook.history["loss"][:2] == [1.0, 2.0]
+    assert math.isnan(hook.history["loss"][2])
+    assert math.isnan(hook.history["pend_dropped"][0])
+    assert hook.history["pend_dropped"][1] == 3.0
+    assert len(hook.history["loss"]) == len(hook.history["pend_dropped"]) == 3
+
+
+def test_dense_store_counts_pend_overflow_drops():
+    table = jnp.zeros((16, 4), jnp.float32)
+    store = DenseStore.create(table, lr=0.1, defer=True, pend_slots=2)
+    ids = jnp.arange(5, dtype=jnp.int32)  # 5 uniques into 2 slots
+    grads = jnp.ones((5, 4), jnp.float32)
+    store = store.apply_sparse_grads(ids, grads)
+    assert int(store.pend_dropped) == 3
+    store = store.flush()
+    assert int(store.pend_dropped) == 3  # lifetime count survives the flush
+    # within capacity: no drops accumulate
+    store2 = DenseStore.create(table, lr=0.1, defer=True, pend_slots=8)
+    store2 = store2.apply_sparse_grads(ids, grads)
+    assert int(store2.pend_dropped) == 0
+
+
+def test_logging_hook_warns_once_on_pend_drops():
+    lines = []
+    hook = LoggingHook(log_every=1, print_fn=lines.append)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        hook.on_step(1, None, {"loss": 0.1, "pend_dropped": 0.0}, None)
+        hook.on_step(2, None, {"loss": 0.1, "pend_dropped": 7.0}, None)
+        hook.on_step(3, None, {"loss": 0.1, "pend_dropped": 9.0}, None)
+    pend_warns = [w for w in caught if "pend buffer overflowed" in str(w.message)]
+    assert len(pend_warns) == 1  # warn-once
+    assert issubclass(pend_warns[0].category, RuntimeWarning)
+    assert "pend_drop" not in lines[0]
+    assert "pend_drop 7" in lines[1] and "pend_drop 9" in lines[2]
