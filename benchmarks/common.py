@@ -6,6 +6,7 @@ snapshot schema as ``--metrics-out`` (see docs/TELEMETRY.md)."""
 
 from __future__ import annotations
 
+import math
 import time
 from typing import Callable, List
 
@@ -16,10 +17,14 @@ from repro.common import telemetry
 ROWS: List[str] = []
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def emit(name: str, us_per_call: float, derived: str = "", gauge: bool = True):
+    """One benchmark row. ``gauge=False`` (or a NaN timing) keeps the row out
+    of the telemetry snapshot — a number that was not measured on this
+    backend must not masquerade as a 0.0 µs result in ``BENCH_*.json``."""
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
-    telemetry.gauge(f"bench/{name}", us_per_call)
+    if gauge and not math.isnan(us_per_call):
+        telemetry.gauge(f"bench/{name}", us_per_call)
     print(row, flush=True)
 
 

@@ -25,6 +25,7 @@ Mapping (see DESIGN.md §6):
     sparse_adagrad bench_kernels      fused Adagrad kernel HBM traffic
     roofline bench_roofline           dry-run roofline table (pod scale)
     hogwild bench_hogwild             §3.1 multi-trainer triplets/s scaling
+    pipeline bench_pipeline           pipelined pull prefetch + coalesced push
 """
 
 import argparse
@@ -49,7 +50,7 @@ def main() -> None:
     from benchmarks import (
         bench_accuracy, bench_capacity, bench_degree_negatives, bench_hogwild,
         bench_kernels, bench_negative_sampling, bench_overlap,
-        bench_partitioning, bench_roofline, bench_scaling,
+        bench_partitioning, bench_pipeline, bench_roofline, bench_scaling,
     )
 
     suites = {
@@ -64,6 +65,7 @@ def main() -> None:
         "sparse_adagrad": bench_kernels.run_sparse_adagrad,
         "roofline": bench_roofline.run,
         "hogwild": bench_hogwild.run,
+        "pipeline": bench_pipeline.run,
     }
     wanted = [w for w in args.only.split(",") if w] or list(suites)
     print("name,us_per_call,derived")

@@ -91,6 +91,28 @@ KNOWN_METRICS: Dict[str, str] = {
     "kvstore/push_rows_per_step": "gauge: same, per step",
     "kvstore/push_bytes": "counter: ICI bytes moved by remote grad pushes",
     "kvstore/push_bytes_per_step": "gauge: same, per step",
+    # pipelined pull prefetch (--pipeline-depth 1): the lookahead pull for
+    # batch t+1, issued before the push/apply of batch t
+    "kvstore/prefetch_rows": "counter: remote row-slots pulled by the "
+                             "pipelined one-step lookahead",
+    "kvstore/prefetch_rows_per_step": "gauge: same, per step",
+    "kvstore/prefetch_bytes": "counter: ICI bytes moved by prefetch pulls",
+    "kvstore/prefetch_bytes_per_step": "gauge: same, per step",
+    # micro-batched coalesced push (--push-every K): one deduplicated
+    # all_to_all flushes K steps' remote grads
+    "kvstore/coalesced_push_rows": "counter: remote grad row-slots moved by "
+                                   "coalesced-push flushes",
+    "kvstore/coalesced_push_rows_per_flush": "gauge: same, per flush",
+    "kvstore/coalesced_push_bytes": "counter: ICI bytes moved by "
+                                    "coalesced-push flushes",
+    "kvstore/coalesced_push_bytes_per_flush": "gauge: same, per flush",
+    "kvstore/coalesced_push_flushes": "counter: coalesced-push flush "
+                                      "programs run (one per K steps, plus "
+                                      "a final partial-window flush)",
+    "kvstore/coalesced_push_dropped": "counter: unique rows dropped by the "
+                                      "capacity-bounded coalesce buffers, "
+                                      "sampled from the step metric at "
+                                      "TelemetryHook snapshot cadence",
     # optimizer dispatch (trace-time decisions)
     "optim/dispatch_fused": "counter: sparse_adagrad_apply traces that chose "
                             "the fused Pallas kernel path",
@@ -102,6 +124,8 @@ KNOWN_METRICS: Dict[str, str] = {
     "step/neg_score": "gauge: mean negative score at the last snapshot step",
     "step/pend_dropped": "gauge: pend-buffer rows dropped by the snapshot "
                          "step (cumulative over a store's lifetime)",
+    "step/push_dropped": "gauge: coalesce-buffer rows dropped by the "
+                         "snapshot step (--push-every overflow)",
     # sampler-side stats forwarded from make_batch
     "sampler/dropped": "counter: triplets dropped by capacity-bounded "
                        "distributed samplers (stats['dropped'])",

@@ -42,9 +42,16 @@ class Metrics:
 
 
 def _candidate_scores(
-    cfg: KGEConfig, state: KGEState, h, r, t, cand, corrupt: str
+    cfg: KGEConfig, state: KGEState, h, r, t, cand, corrupt: str,
+    q_chunk: int = 64,
 ) -> jnp.ndarray:
-    """Scores of (q, C) candidate corruptions. cand: (C,) or (q, C)."""
+    """Scores of (q, C) candidate corruptions. cand: (C,) or (q, C).
+
+    The per-query branch evaluates ``q_chunk`` queries at a time with
+    ``jax.lax.map``, so peak memory is the (q_chunk, C, d) candidate gather
+    rather than the full (q, C, d) — protocol-2 eval at Freebase scale was
+    materializing q * 2000 * d floats per chunk of test triplets.
+    """
     scale = emb_init_scale(cfg)
     ctx = S.ShardCtx(None)
     e = state.entity[h if corrupt == "tail" else t]
@@ -55,7 +62,7 @@ def _candidate_scores(
             cfg.model, e, rr, state.entity[cand], corrupt, cfg.gamma, ctx,
             r_proj=pr, rel_dim=cfg.rel_dim, emb_scale=scale,
         )
-    # per-query candidates: vmap over queries
+    # per-query candidates: vmap over queries, q_chunk queries per map step
     def one(e1, r1, c, p1):
         return S.negative_score(
             cfg.model, e1[None], r1[None], state.entity[c], corrupt, cfg.gamma,
@@ -63,7 +70,20 @@ def _candidate_scores(
             rel_dim=cfg.rel_dim, emb_scale=scale,
         )[0]
 
-    return jax.vmap(one, in_axes=(0, 0, 0, None if pr is None else 0))(e, rr, cand, pr)
+    q = cand.shape[0]
+    qc = max(1, min(q_chunk, q))
+    pad = (-q) % qc
+    padq = (lambda x: jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)])
+            if pad else x)
+    chunked = lambda x: padq(x).reshape((-1, qc) + x.shape[1:])
+    if pr is None:
+        out = jax.lax.map(
+            lambda a: jax.vmap(lambda e1, r1, c: one(e1, r1, c, None))(*a),
+            (chunked(e), chunked(rr), chunked(cand)))
+    else:
+        out = jax.lax.map(lambda a: jax.vmap(one)(*a),
+                          (chunked(e), chunked(rr), chunked(cand), chunked(pr)))
+    return out.reshape((q + pad,) + out.shape[2:])[:q]
 
 
 def _pos_scores(cfg, state, h, r, t) -> jnp.ndarray:
@@ -128,15 +148,21 @@ def ranks_protocol2(
     n_degree: int = 1000,
     rng: Optional[np.random.Generator] = None,
     chunk: int = 256,
+    q_chunk: int = 64,
 ) -> np.ndarray:
-    """Protocol 2 (Freebase): 2000 sampled negatives, unfiltered."""
+    """Protocol 2 (Freebase): 2000 sampled negatives, unfiltered.
+
+    ``chunk`` bounds host-side work per dispatch; ``q_chunk`` bounds device
+    peak memory (queries scored at once — see ``_candidate_scores``).
+    """
     rng = rng or np.random.default_rng(0)
     p = degrees / degrees.sum()
     ranks = []
     for corrupt in ("tail", "head"):
         f = jax.jit(
             lambda h, r, t, cand: (
-                _candidate_scores(cfg, state, h, r, t, cand, corrupt),
+                _candidate_scores(cfg, state, h, r, t, cand, corrupt,
+                                  q_chunk=q_chunk),
                 _pos_scores(cfg, state, h, r, t),
             )
         )

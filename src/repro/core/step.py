@@ -63,6 +63,7 @@ def store_grads(
     ctx: Optional[S.ShardCtx] = None,
     n_servers: int = 1,
     pairwise_fn=None,
+    prefetched: Optional[Dict[str, jnp.ndarray]] = None,
 ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, jnp.ndarray]]:
     """Phases 2–3: gather workspaces + loss/metrics + sparse row gradients.
 
@@ -70,6 +71,11 @@ def store_grads(
     ``flush()`` — a Hogwild trainer gathers from the published store as-is
     (stale reads tolerated, paper §3.1); the one-shot ``store_train_step``
     flushes before calling this.
+
+    ``prefetched`` (the pipelined path) supplies the entity/relation
+    workspaces already pulled during the previous step — the gathers are
+    skipped and gradients are computed against those one-step-stale rows
+    (the depth-1 staleness contract, ``prefetch_workspaces``).
     """
     ctx = S.ShardCtx(None) if ctx is None else ctx
     scale = emb_init_scale(cfg)
@@ -79,11 +85,14 @@ def store_grads(
     has_shared = "shared" in stores and rel_shared is not None
     has_proj = "proj" in stores
 
-    # ---- 2. pull the workspaces
+    # ---- 2. pull the workspaces (or reuse the previous step's prefetch)
     ent = stores["entity"]
-    ws = ent.gather(batch["ent_ids"])
     rel_store = stores["rel"]
-    rel_ws = rel_store.gather(batch["rel_ids"])
+    if prefetched is not None:
+        ws, rel_ws = prefetched["entity"], prefetched["rel"]
+    else:
+        ws = ent.gather(batch["ent_ids"])
+        rel_ws = rel_store.gather(batch["rel_ids"])
     proj_ws = stores["proj"].gather(batch["rel_ids"]) if has_proj else None
     shared_rows = stores["shared"].gather(rel_shared) if has_shared else None
     is_shared = (rel_shared >= 0)[:, None] if has_shared else None
@@ -253,7 +262,71 @@ def store_train_step(
     if getattr(ent, "defer", False) and getattr(ent, "pend_dropped", None) is not None:
         metrics = dict(metrics,
                        pend_dropped=ent.pend_dropped.astype(jnp.float32))
+    if getattr(ent, "coalesce", False):
+        metrics = dict(metrics,
+                       push_dropped=ent.co_dropped.astype(jnp.float32))
     if machine_axis is not None:
         metrics = {name: jax.lax.pmean(v, machine_axis)
                    for name, v in metrics.items()}
     return new_stores, metrics
+
+
+def prefetch_workspaces(stores: Stores, batch: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Issue the entity/relation workspace pulls for the NEXT batch.
+
+    The depth-1 staleness contract (``--pipeline-depth 1``): the pull reads
+    the *current* tables, before this step's gradients apply, so the rows
+    the next step computes against are at most one update stale — exactly a
+    Hogwild stale read (embeddings/store.py), and the gradients still apply
+    to the latest table. Issued in program order BEFORE the push/apply so
+    async dispatch overlaps the pull collectives with the update.
+    """
+    ent, rel = stores["entity"], stores["rel"]
+    return {
+        "entity": (ent.gather_prefetch(batch["ent_ids"])
+                   if hasattr(ent, "gather_prefetch")
+                   else ent.gather(batch["ent_ids"])),
+        "rel": (rel.gather_prefetch(batch["rel_ids"])
+                if hasattr(rel, "gather_prefetch")
+                else rel.gather(batch["rel_ids"])),
+    }
+
+
+def store_pipelined_step(
+    cfg: KGEConfig,
+    stores: Stores,
+    batch: Dict[str, jnp.ndarray],
+    prefetched: Dict[str, jnp.ndarray],
+    next_batch: Dict[str, jnp.ndarray],
+    *,
+    ctx: Optional[S.ShardCtx] = None,
+    n_servers: int = 1,
+    machine_axis=None,
+    pairwise_fn=None,
+) -> Tuple[Stores, Dict[str, jnp.ndarray], Dict[str, jnp.ndarray]]:
+    """Depth-1 pipelined ``store_train_step``: grads from the PREVIOUS
+    step's prefetched workspaces, pull for the next batch issued before the
+    push/apply of this one.
+
+    Returns ``(stores, next_prefetched, metrics)``. No flush phase: the
+    pipelined path requires T5 defer off (the pipeline already provides the
+    overlap, and both contracts are single-writer — enforced by
+    ``core.distributed.make_program``). ``next_batch`` only needs the
+    ``ent_ids``/``rel_ids`` addresses.
+    """
+    with telemetry.span("step/grad"):
+        grads, metrics = store_grads(
+            cfg, stores, batch, ctx=ctx, n_servers=n_servers,
+            pairwise_fn=pairwise_fn, prefetched=prefetched)
+    with telemetry.span("step/prefetch"):
+        new_pf = prefetch_workspaces(stores, next_batch)
+    with telemetry.span("step/apply"):
+        new_stores = store_apply_grads(stores, batch, grads)
+    ent = new_stores["entity"]
+    if getattr(ent, "coalesce", False):
+        metrics = dict(metrics,
+                       push_dropped=ent.co_dropped.astype(jnp.float32))
+    if machine_axis is not None:
+        metrics = {name: jax.lax.pmean(v, machine_axis)
+                   for name, v in metrics.items()}
+    return new_stores, new_pf, metrics

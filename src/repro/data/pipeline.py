@@ -67,6 +67,7 @@ class WorkerPool:
         if n_workers < 1:
             raise ValueError(f"n_workers must be >= 1, got {n_workers}")
         self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._peeked = _NOTHING  # one-item lookahead cell (see peek())
         self._stop = threading.Event()
         self._stat_lock = threading.Lock()
         self._produced = 0
@@ -114,7 +115,11 @@ class WorkerPool:
 
     # ---- consumer side -----------------------------------------------------
     def get(self, timeout: Optional[float] = None):
-        """Next batch; blocks (``queue.Empty`` on timeout). Thread-safe."""
+        """Next batch; blocks (``queue.Empty`` on timeout). Thread-safe
+        unless ``peek()`` is in use (see there)."""
+        if self._peeked is not _NOTHING:
+            item, self._peeked = self._peeked, _NOTHING
+            return item
         try:
             return self.q.get_nowait()
         except queue.Empty:
@@ -123,6 +128,24 @@ class WorkerPool:
                 return self.q.get(timeout=timeout)
             finally:
                 self._add_wait("_consumer_wait", t0)
+
+    def peek(self, timeout: Optional[float] = None):
+        """One-batch lookahead: the next batch WITHOUT consuming it.
+
+        Repeated ``peek()`` calls return the same object until the next
+        ``get()``, which returns the peeked batch first. This is how the
+        pipelined distributed step sees batch ``t+1`` while stepping batch
+        ``t`` — it issues the KVStore pull for ``t+1`` before the push of
+        ``t`` (core/distributed.py, ``--pipeline-depth 1``).
+
+        Single-consumer only: the lookahead cell is unlocked, so mixing
+        ``peek()`` with concurrent ``get()`` from other threads can deliver
+        one batch twice. The Hogwild runtime never peeks; the lookahead
+        train loop is single-trainer by construction (launch/engine.py).
+        """
+        if self._peeked is _NOTHING:
+            self._peeked = self.get(timeout)
+        return self._peeked
 
     def __iter__(self) -> Iterator:
         return self

@@ -81,7 +81,8 @@ def pull_local(block: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
 
 
 def pull_remote(
-    block: jnp.ndarray, req: jnp.ndarray, spec: KVStoreSpec
+    block: jnp.ndarray, req: jnp.ndarray, spec: KVStoreSpec,
+    metric_prefix: str = "kvstore/pull",
 ) -> jnp.ndarray:
     """Fetch rows from peers.
 
@@ -90,13 +91,17 @@ def pull_remote(
     req:   (n_parts, Rp) int32 — req[p] are row ids *local to machine p* that
            this machine wants; -1 pads.
     returns: (n_parts * Rp, d_shard) the fetched rows, zeros at pads.
+
+    ``metric_prefix`` names the comm-accounting counters — the pipelined
+    step's lookahead pull passes ``"kvstore/prefetch"`` so prefetched and
+    eager pulls stay separable in telemetry (docs/TELEMETRY.md).
     """
     ax = spec.machine_axis
     # comm accounting (per machine per step; request slots include pads —
     # the capacity-bounded a2a always moves the full buffer)
-    telemetry.trace_inc("kvstore/pull_rows", req.size)
+    telemetry.trace_inc(f"{metric_prefix}_rows", req.size)
     if ax is not None:
-        telemetry.trace_inc("kvstore/pull_bytes",
+        telemetry.trace_inc(f"{metric_prefix}_bytes",
                             _wire_bytes(req, block.shape[-1], spec))
     if ax is None:
         # degenerate single-machine KVStore: the only peer is ourselves
@@ -111,21 +116,24 @@ def pull_remote(
 
 
 def push_remote_grads(
-    grads: jnp.ndarray, req: jnp.ndarray, spec: KVStoreSpec
+    grads: jnp.ndarray, req: jnp.ndarray, spec: KVStoreSpec,
+    metric_prefix: str = "kvstore/push",
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Return gradients for remotely-owned rows to their owners.
 
     grads: (n_parts * Rp, d_shard) gradients for the rows fetched via
            ``pull_remote`` (same order).
-    req:   the same request matrix passed to ``pull_remote``.
+    req:   the same request matrix passed to ``pull_remote``; any per-peer
+           width works (the coalesced flush passes its wider merge buffers
+           with ``metric_prefix="kvstore/coalesced_push"``).
     returns: (ids, grad_rows) on the *owner*: ids are machine-local row ids
              (with -1 pads) of rows whose gradients arrived, grad_rows the
              matching gradient rows. Apply with sparse Adagrad.
     """
     ax = spec.machine_axis
-    telemetry.trace_inc("kvstore/push_rows", req.size)
+    telemetry.trace_inc(f"{metric_prefix}_rows", req.size)
     if ax is not None:
-        telemetry.trace_inc("kvstore/push_bytes",
+        telemetry.trace_inc(f"{metric_prefix}_bytes",
                             _wire_bytes(req, grads.shape[-1], spec))
     if ax is None:
         # degenerate single-machine KVStore: grads already sit on the owner

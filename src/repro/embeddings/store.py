@@ -128,6 +128,28 @@ def _park_pending(pend_ids, pend_grads, ids, grads):
     return out_ids, out_grads.astype(pend_grads.dtype), n_dropped
 
 
+def _coalesce_remote(co_ids, co_grads, req, g_remote):
+    """Merge one step's remote grads into the per-peer coalesce buffers.
+
+    ``_park_pending`` applied per peer: for each peer ``p`` the already-
+    buffered ``(co_ids[p], co_grads[p])`` and this step's ``(req[p],
+    g_remote[p])`` are dedup-aggregated and compacted back into the fixed
+    per-peer capacity by ``dedup_compact_rows``. Uniques beyond capacity are
+    dropped (counted — surfaced as the ``push_dropped`` step metric). The
+    jnp dedup path is forced: the merge runs under ``vmap`` over peers,
+    where the Pallas dedup kernel's scalar-prefetch layout does not apply.
+
+    Returns ``(ids (P, Ck), grads (P, Ck, d), n_dropped scalar)``.
+    """
+    def merge(ci, cg, ri, rg):
+        ids = jnp.concatenate([ci, ri.astype(jnp.int32)])
+        g = jnp.concatenate([cg, rg.astype(cg.dtype)], axis=0)
+        return dedup_compact_rows(ids, g, ci.shape[0], use_kernel=False)
+
+    ids, grads, dropped = jax.vmap(merge)(co_ids, co_grads, req, g_remote)
+    return ids, grads, jnp.sum(dropped)
+
+
 # ===========================================================================
 @dataclasses.dataclass
 class DenseStore:
@@ -224,14 +246,37 @@ class ShardedStore:
     # lifetime drop count of the capacity-bounded defer (see DenseStore)
     pend_dropped: jnp.ndarray = dataclasses.field(
         default_factory=lambda: jnp.zeros((), jnp.int32))
+    # micro-batched coalesced push (--push-every K): remote grads accumulate
+    # per peer in (n_parts, Ck[, d]) merge buffers across steps and leave in
+    # one deduplicated all_to_all at push_flush(); (n_parts, 0[, d]) when off
+    co_ids: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.zeros((1, 0), jnp.int32))
+    co_grads: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.zeros((1, 0, 1), jnp.float32))
+    # per-step drop count of the capacity-bounded coalesce buffers
+    co_dropped: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.zeros((), jnp.int32))
+    coalesce: bool = False  # static
+
+    def __post_init__(self):
+        if self.coalesce and self.defer:
+            raise ValueError(
+                "coalesce and defer are mutually exclusive: both hold this "
+                "step's grads back, and mixing their buffers would apply "
+                "remote rows on a different cadence than local ones")
 
     @classmethod
     def create(cls, table: jnp.ndarray, spec: KVStoreSpec, lr: float,
-               defer: bool = False, pend_slots: int = 0) -> "ShardedStore":
+               defer: bool = False, pend_slots: int = 0,
+               coalesce_slots: int = 0) -> "ShardedStore":
         pid, pg = _empty_pending(table.shape[-1], pend_slots if defer else 0,
                                  table.dtype)
+        co_i = jnp.full((spec.n_parts, coalesce_slots), -1, jnp.int32)
+        co_g = jnp.zeros((spec.n_parts, coalesce_slots, table.shape[-1]),
+                         table.dtype)
         return cls(table=table, gsq=jnp.zeros_like(table), pend_ids=pid,
-                   pend_grads=pg, spec=spec, lr=lr, defer=defer)
+                   pend_grads=pg, spec=spec, lr=lr, defer=defer,
+                   co_ids=co_i, co_grads=co_g, coalesce=coalesce_slots > 0)
 
     def gather(self, ids: ShardedIds) -> jnp.ndarray:
         """Workspace = [local rows (L,); remote rows (n_parts * Rp,)]."""
@@ -239,10 +284,31 @@ class ShardedStore:
         rem = pull_remote(self.table, ids.remote, self.spec)
         return jnp.concatenate([loc, rem], axis=0)
 
+    def gather_prefetch(self, ids: ShardedIds) -> jnp.ndarray:
+        """``gather`` for the pipelined one-step lookahead (same rows, same
+        collectives) — the remote pull is accounted as ``kvstore/prefetch_*``
+        so eager and prefetched ICI traffic stay separable."""
+        loc = pull_local(self.table, ids.local)
+        rem = pull_remote(self.table, ids.remote, self.spec,
+                          metric_prefix="kvstore/prefetch")
+        return jnp.concatenate([loc, rem], axis=0)
+
     def apply_sparse_grads(self, ids: ShardedIds, grads) -> "ShardedStore":
         """``grads`` covers the whole workspace returned by ``gather``."""
         L = ids.local.shape[0]
         g_local, g_remote = grads[:L], grads[L:]
+        if self.coalesce:
+            # local rows update now; remote grads merge into the per-peer
+            # coalesce buffers and leave at the next push_flush()
+            n_parts = ids.remote.shape[0]
+            ci, cg, nd = _coalesce_remote(
+                self.co_ids, self.co_grads, ids.remote,
+                g_remote.reshape(n_parts, -1, g_remote.shape[-1]))
+            table, gsq = _adagrad_rows(self.table, self.gsq, ids.local,
+                                       g_local, self.lr)
+            return dataclasses.replace(self, table=table, gsq=gsq,
+                                       co_ids=ci, co_grads=cg,
+                                       co_dropped=self.co_dropped + nd)
         owner_ids, owner_grads = push_remote_grads(g_remote, ids.remote, self.spec)
         all_ids = jnp.concatenate([ids.local, owner_ids]).astype(jnp.int32)
         all_grads = jnp.concatenate([g_local, owner_grads], axis=0)
@@ -254,6 +320,28 @@ class ShardedStore:
         table, gsq = _adagrad_rows(self.table, self.gsq, all_ids, all_grads,
                                    self.lr)
         return dataclasses.replace(self, table=table, gsq=gsq)
+
+    def push_flush(self) -> "ShardedStore":
+        """Flush the coalesce buffers: ONE deduplicated all_to_all returns
+        the accumulated remote grads to their owners, owners apply them with
+        sparse Adagrad, and the buffers reset. No-op when coalescing is off.
+
+        Numerics: the merge already summed duplicate rows, so one flush of K
+        steps' grads equals applying their per-row sums in a single Adagrad
+        step — the flush-equivalence the coalesce tests assert.
+        """
+        if not self.coalesce:
+            return self
+        n_parts, ck = self.co_ids.shape
+        owner_ids, owner_grads = push_remote_grads(
+            self.co_grads.reshape(n_parts * ck, -1), self.co_ids, self.spec,
+            metric_prefix="kvstore/coalesced_push")
+        table, gsq = _adagrad_rows(self.table, self.gsq, owner_ids,
+                                   owner_grads, self.lr)
+        return dataclasses.replace(
+            self, table=table, gsq=gsq,
+            co_ids=jnp.full_like(self.co_ids, -1),
+            co_grads=jnp.zeros_like(self.co_grads))
 
     def flush(self) -> "ShardedStore":
         if self.pend_ids.shape[0] == 0:
@@ -267,8 +355,12 @@ class ShardedStore:
                                    pend_ids=pid, pend_grads=pg)
 
     def snapshot(self) -> Snapshot:
-        return {"table": self.table, "gsq": self.gsq,
+        snap = {"table": self.table, "gsq": self.gsq,
                 "pend_ids": self.pend_ids, "pend_grads": self.pend_grads}
+        if self.coalesce:
+            snap["co_ids"] = self.co_ids
+            snap["co_grads"] = self.co_grads
+        return snap
 
     def restore(self, snap: Snapshot) -> "ShardedStore":
         return dataclasses.replace(self, **snap)
@@ -276,8 +368,9 @@ class ShardedStore:
 
 jax.tree_util.register_dataclass(
     ShardedStore,
-    data_fields=["table", "gsq", "pend_ids", "pend_grads", "pend_dropped"],
-    meta_fields=["spec", "lr", "defer"],
+    data_fields=["table", "gsq", "pend_ids", "pend_grads", "pend_dropped",
+                 "co_ids", "co_grads", "co_dropped"],
+    meta_fields=["spec", "lr", "defer", "coalesce"],
 )
 
 

@@ -251,7 +251,8 @@ class TelemetryHook(Hook):
     lock covers the counters, so one instance serves N trainers.
     """
 
-    _METRIC_KEYS = ("loss", "pos_score", "neg_score", "pend_dropped")
+    _METRIC_KEYS = ("loss", "pos_score", "neg_score", "pend_dropped",
+                    "push_dropped")
 
     def __init__(self, metrics_out: Optional[str] = None,
                  trace_out: Optional[str] = None, every: int = 50):
@@ -276,6 +277,11 @@ class TelemetryHook(Hook):
                 # accumulate the sampled values — exact at every=1, a lower
                 # bound at coarser cadences (docs/TELEMETRY.md)
                 reg.inc("store/pend_dropped", max(0.0, pend))
+            push = metrics.get("push_dropped")
+            if push is not None:
+                # coalesce-buffer overflow drops, same sampling caveat as
+                # store/pend_dropped above
+                reg.inc("kvstore/coalesced_push_dropped", max(0.0, float(push)))
         if self.metrics_out:
             if self._file is None:
                 self._file = open(self.metrics_out, "w")
@@ -340,7 +346,21 @@ def train_loop(step_fn, state, make_batch, n_steps: int, *, start: int = 0,
     ``split_step=(grad_fn, apply_fn)`` enables stale-gradient Hogwild steps
     (see ``runtime.hogwild_train_loop``; without it the whole ``step_fn`` is
     swapped atomically).
+
+    A ``step_fn`` with a truthy ``lookahead`` attribute (the pipelined
+    distributed runner, ``core.distributed.PipelinedDistStep``) is called as
+    ``step_fn(state, batch, next_batch)``: the loop *peeks* batch t+1 from
+    the prefetcher without consuming it, so the step can issue the pull for
+    t+1 before the push of t. A ``step_fn.finalize`` method, when present,
+    is applied to the final state before ``on_end`` hooks (it flushes a
+    partial coalesced-push window).
     """
+    lookahead = bool(getattr(step_fn, "lookahead", False))
+    if lookahead and (n_trainers > 1 or n_samplers > 1):
+        raise ValueError(
+            "pipelined lookahead step and the Hogwild multi-trainer runtime "
+            "are mutually exclusive (peek() is single-consumer; the pipeline "
+            "is its own overlap mechanism)")
     if n_trainers > 1 or n_samplers > 1:
         from repro.launch.runtime import hogwild_train_loop
 
@@ -350,17 +370,33 @@ def train_loop(step_fn, state, make_batch, n_steps: int, *, start: int = 0,
             sampler_factory=sampler_factory, split_step=split_step)
     if start >= n_steps:
         return _finish(start, state, hooks)
+    if lookahead and not prefetch:
+        raise ValueError(
+            "pipelined lookahead step requires prefetch=True: the one-batch "
+            "lookahead is WorkerPool.peek() on the prefetch queue")
     src = Prefetcher(make_batch) if prefetch else iter(make_batch, object())
     i = start
     try:
-        for i, (batch, stats) in zip(range(start + 1, n_steps + 1), src):
-            with telemetry.span("engine/step"):
-                state, metrics = step_fn(state, batch)
-            for h in hooks:
-                h.on_step(i, state, metrics, stats)
+        if lookahead:
+            for i in range(start + 1, n_steps + 1):
+                batch, stats = src.get()
+                nxt, _ = src.peek()
+                with telemetry.span("engine/step"):
+                    state, metrics = step_fn(state, batch, nxt)
+                for h in hooks:
+                    h.on_step(i, state, metrics, stats)
+        else:
+            for i, (batch, stats) in zip(range(start + 1, n_steps + 1), src):
+                with telemetry.span("engine/step"):
+                    state, metrics = step_fn(state, batch)
+                for h in hooks:
+                    h.on_step(i, state, metrics, stats)
     finally:
         if prefetch:
             src.close()
+    finalize = getattr(step_fn, "finalize", None)
+    if finalize is not None:
+        state = finalize(state)
     return _finish(i, state, hooks)
 
 

@@ -69,6 +69,14 @@ def main():
     ap.add_argument("--samplers", type=int, default=1,
                     help="sampler worker threads (paper §3.3)")
     ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--pipeline-depth", type=int, default=0, choices=[0, 1],
+                    help="distributed only: 1 = double-buffered KVStore pull "
+                         "prefetch (issue the pull for batch t+1 before the "
+                         "push of batch t; one-step-stale reads)")
+    ap.add_argument("--push-every", type=int, default=1,
+                    help="distributed only: coalesce remote grad pushes in "
+                         "per-peer merge buffers and flush them as one "
+                         "deduplicated all_to_all every K steps")
     ap.add_argument("--mesh", default="4x2", help="data x model, e.g. 4x2")
     ap.add_argument("--partitioner", default="metis", choices=["metis", "random"])
     ap.add_argument("--no-overlap", action="store_true")
@@ -134,6 +142,10 @@ def main():
         from repro.kernels.kge_score.ops import kernel_pairwise_fn
 
         pairwise_fn = kernel_pairwise_fn
+
+    if not args.distributed and (args.pipeline_depth or args.push_every > 1):
+        ap.error("--pipeline-depth/--push-every require --distributed "
+                 "(they pipeline the KVStore collectives)")
 
     if args.distributed:
         _train_distributed(args, cfg, kg, pairwise_fn)
@@ -240,7 +252,10 @@ def _train_distributed(args, cfg, kg, pairwise_fn):
 
     from repro.common.checkpoint import latest_step, restore_checkpoint
     from repro.common.compat import set_mesh
-    from repro.core.distributed import build_dist_train_step, init_dist_state, make_program
+    from repro.core.distributed import (
+        build_dist_train_step, build_pipelined_dist_step, init_dist_state,
+        make_program,
+    )
     from repro.core.graph_part import cut_fraction, partition
     from repro.core.rel_part import relation_partition
     from repro.core.sampling import DistSampler
@@ -260,9 +275,23 @@ def _train_distributed(args, cfg, kg, pairwise_fn):
                      method=args.partitioner, seed=args.seed)
     print(f"partitioner={args.partitioner} cut={cut_fraction(kg.train, book.part_of):.3f}")
     rp = relation_partition(kg.rel_counts(), n_parts, seed=args.seed)
-    prog = make_program(cfg, book.rows_per_part, rp.slots_per_part, rp.n_shared)
+    pipelined = args.pipeline_depth > 0 or args.push_every > 1
+    if pipelined and cfg.overlap_update:
+        print("pipelined KVStore I/O: T5 overlap off (the pipeline is its "
+              "own single-writer one-step-stale overlap mechanism)")
+        cfg = dataclasses.replace(cfg, overlap_update=False)
+    if pipelined and (args.trainers > 1 or args.samplers > 1):
+        raise SystemExit("--pipeline-depth/--push-every are incompatible "
+                         "with --trainers/--samplers > 1 (the lookahead is "
+                         "single-consumer; see launch/engine.train_loop)")
+    prog = make_program(cfg, book.rows_per_part, rp.slots_per_part, rp.n_shared,
+                        pipeline_depth=args.pipeline_depth,
+                        push_every=args.push_every)
     sampler = DistSampler(kg.train, book, rp, cfg, np.random.default_rng(args.seed))
-    step, state_sh, batch_sh = build_dist_train_step(prog, mesh, pairwise_fn)
+    if pipelined:
+        step, state_sh, batch_sh = build_pipelined_dist_step(prog, mesh, pairwise_fn)
+    else:
+        step, state_sh, batch_sh = build_dist_train_step(prog, mesh, pairwise_fn)
 
     with set_mesh(mesh):
         start = 0

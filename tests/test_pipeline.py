@@ -194,6 +194,36 @@ def test_worker_pool_rejects_zero_workers():
         raise AssertionError("expected ValueError")
 
 
+def test_peek_is_nonconsuming_lookahead():
+    """peek() returns batch t+1 without consuming it: repeated peeks see the
+    same object, the next get() returns it, and the stream stays in order —
+    the contract the pipelined train loop (--pipeline-depth 1) relies on."""
+    counter = iter(range(1000))
+    pf = Prefetcher(lambda: next(counter))
+    assert pf.get(timeout=2.0) == 0
+    peeked = pf.peek(timeout=2.0)
+    assert peeked == 1
+    assert pf.peek(timeout=2.0) is pf.peek(timeout=2.0)  # idempotent
+    assert pf.get(timeout=2.0) == peeked  # get() consumes the peeked batch
+    assert pf.peek(timeout=2.0) == 2  # lookahead resumes from the queue
+    got = [pf.get(timeout=2.0) for _ in range(5)]
+    pf.close()
+    assert got == [2, 3, 4, 5, 6]  # nothing lost, nothing duplicated
+
+
+def test_peek_does_not_corrupt_stats_or_close():
+    """A batch parked in the lookahead cell is invisible to the queue; stats
+    stay consistent and close() joins cleanly with a batch still peeked."""
+    pool = WorkerPool(lambda wid: (lambda: 0), n_workers=2, depth=2)
+    pool.peek(timeout=2.0)
+    s = pool.stats()
+    assert s["produced"] >= 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a shutdown warning = failure
+        pool.close()
+    assert not any(t.is_alive() for t in pool.threads)
+
+
 def test_worker_pool_distinct_rngs_give_distinct_batches():
     """End-to-end sanity for the train.py wiring: two workers sampling from
     the same data with worker_rngs produce different index streams."""

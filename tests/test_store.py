@@ -125,6 +125,73 @@ def test_defer_then_flush_equals_immediate(small_kg):
                                rtol=1e-6, atol=1e-7)
 
 
+def test_coalesce_then_push_flush_equals_single_apply(small_kg):
+    """Three steps of remote grads through the coalesce buffers + one
+    push_flush() == ONE Adagrad apply of the concatenated grads (the merge
+    sums duplicate rows, and sparse_adagrad_apply aggregates before the
+    update) — the --push-every flush-equivalence."""
+    cfg = _cfg(small_kg)
+    state = init_state(cfg, jax.random.key(4))
+    spec = KVStoreSpec(machine_axis=None, n_parts=1, remote_capacity=8)
+    rng = np.random.default_rng(4)
+    R = 8
+    steps = [(rng.integers(0, cfg.n_entities, size=R).astype(np.int32),
+              rng.standard_normal((R, cfg.dim)).astype(np.float32))
+             for _ in range(3)]
+
+    co = ShardedStore.create(state.entity, spec, cfg.lr, coalesce_slots=64)
+    assert co.coalesce
+    pad = jnp.full((2,), -1, jnp.int32)  # all-pad local slots: remote only
+    for ids, grads in steps:
+        sb = ShardedIds(pad, jnp.asarray(ids)[None])
+        ws_grads = jnp.concatenate(
+            [jnp.zeros((2, cfg.dim), jnp.float32), jnp.asarray(grads)])
+        co = co.apply_sparse_grads(sb, ws_grads)
+    # capacity 64 >> uniques: nothing dropped, table untouched until flush
+    assert int(co.co_dropped) == 0
+    np.testing.assert_array_equal(np.asarray(co.table),
+                                  np.asarray(state.entity))
+    co = co.push_flush()
+    np.testing.assert_array_equal(np.asarray(co.co_ids), -1)  # buffers reset
+    np.testing.assert_array_equal(np.asarray(co.co_grads), 0.0)
+
+    ref = DenseStore.create(state.entity, cfg.lr)
+    ref = ref.apply_sparse_grads(
+        jnp.asarray(np.concatenate([i for i, _ in steps])),
+        jnp.asarray(np.concatenate([g for _, g in steps])))
+    np.testing.assert_allclose(np.asarray(co.table), np.asarray(ref.table),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(co.gsq), np.asarray(ref.gsq),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_coalesce_overflow_drops_are_counted(small_kg):
+    """Uniques beyond the per-peer merge capacity are dropped AND counted —
+    co_dropped is the push_dropped step metric, never a silent loss."""
+    cfg = _cfg(small_kg)
+    state = init_state(cfg, jax.random.key(5))
+    spec = KVStoreSpec(machine_axis=None, n_parts=1, remote_capacity=6)
+    co = ShardedStore.create(state.entity, spec, cfg.lr, coalesce_slots=4)
+    pad = jnp.full((1,), -1, jnp.int32)
+
+    def apply(co, ids):
+        ws = jnp.concatenate(
+            [jnp.zeros((1, cfg.dim)), jnp.ones((len(ids), cfg.dim))]
+        ).astype(jnp.float32)
+        return co.apply_sparse_grads(
+            ShardedIds(pad, jnp.asarray(ids, jnp.int32)[None]), ws)
+
+    # 6 unique rows into 4 slots: exactly 2 drop
+    co = apply(co, [0, 1, 2, 3, 4, 5])
+    assert int(co.co_dropped) == 2
+    assert int(jnp.sum(co.co_ids >= 0)) == 4  # buffer full with 4 uniques
+    # same rows again: the union still has 6 uniques -> 2 more drop, and the
+    # 4 buffered rows merged in place (no new slots consumed)
+    co = apply(co, [0, 1, 2, 3, 4, 5])
+    assert int(co.co_dropped) == 4
+    assert int(jnp.sum(co.co_ids >= 0)) == 4
+
+
 def test_snapshot_restore_checkpoint_roundtrip(tmp_path, small_kg):
     """snapshot() -> save_checkpoint -> restore_checkpoint -> restore()."""
     cfg = _cfg(small_kg)
